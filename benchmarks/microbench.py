@@ -1,0 +1,124 @@
+"""Microbenchmark sweeps — paper Figures 11, 12, 13.
+
+Q1/Q6-style range scans over lineitem SF30 (~1.26GB accessed working set),
+sweeping buffer-pool size / I/O bandwidth / concurrent streams, comparing
+LRU, CScans, PBM, OPT (+ beyond-paper PBM/LRU and Attach&Throttle with
+--extended).  OPT is reported two ways, matching the paper's methodology:
+I/O volume from Belady's MIN replayed on the PBM run's reference trace, and
+stream time from the in-engine exact-distance oracle policy.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional
+
+from repro.core import EngineConfig, run_workload, simulate_belady
+from repro.core.workload import (
+    make_lineitem_db,
+    micro_accessed_bytes,
+    micro_streams,
+)
+
+POLICIES = ["lru", "cscan", "pbm", "opt"]
+EXTENDED = ["mru", "pbm_lru", "attach"]
+
+DEFAULTS = dict(n_streams=8, queries=16, bandwidth=700e6, buffer_frac=0.4, seed=3)
+
+
+def one_point(db, ws, policies, *, n_streams, queries, bandwidth, buffer_frac,
+              seed, fraction=None, time_slice=0.1) -> List[Dict]:
+    streams = micro_streams(db, n_streams=n_streams, queries_per_stream=queries,
+                            fraction=fraction, seed=seed)
+    rows = []
+    pbm_trace = None
+    for pol in policies:
+        cfg = EngineConfig(
+            bandwidth=bandwidth,
+            buffer_bytes=max(1 << 22, int(buffer_frac * ws)),
+            sample_interval=2.0,
+            record_trace=(pol == "pbm"),
+            pbm_time_slice=time_slice,
+        )
+        t0 = time.time()
+        r = run_workload(db, streams, pol, cfg)
+        row = {
+            "policy": pol,
+            "avg_stream_time_s": round(r.avg_stream_time, 3),
+            "io_gb": round(r.io_gb, 3),
+            "wall_s": round(time.time() - t0, 2),
+        }
+        if pol == "pbm":
+            pbm_trace = (r.trace, r.page_sizes)
+        rows.append(row)
+    if pbm_trace is not None and "opt" in policies:
+        # paper methodology: Belady's MIN on the PBM run's reference string
+        trace, sizes = pbm_trace
+        cfgb = max(1 << 22, int(buffer_frac * ws))
+        misses, missed_bytes = simulate_belady(
+            trace, page_sizes=sizes, capacity_bytes=cfgb
+        )
+        for row in rows:
+            if row["policy"] == "opt":
+                row["io_gb_belady_trace"] = round(missed_bytes / 1e9, 3)
+    return rows
+
+
+def sweep(which: str, policies: List[str], scale: float = 1.0, seed: int = 3):
+    db = make_lineitem_db(scale_tuples=int(180_000_000 * scale))
+    ws = micro_accessed_bytes(db)
+    points = {
+        "buffer": [0.1, 0.2, 0.4, 0.6, 0.8, 1.0],
+        "bandwidth": [200e6, 400e6, 700e6, 1000e6, 1400e6, 2000e6],
+        "streams": [1, 2, 4, 8, 16, 32],
+    }[which]
+    out = []
+    for p in points:
+        kw = dict(DEFAULTS)
+        kw["seed"] = seed
+        if which == "buffer":
+            kw["buffer_frac"] = p
+        elif which == "bandwidth":
+            kw["bandwidth"] = p
+        else:
+            kw["n_streams"] = int(p)
+        fraction = 0.5 if which == "streams" else None  # paper Fig 13: 50% scans
+        # PBM bucket resolution scales with the (scaled) workload duration
+        rows = one_point(db, ws, policies, fraction=fraction,
+                         time_slice=0.1 * scale, **kw)
+        for r in rows:
+            r["sweep"] = which
+            r["point"] = p
+        out.extend(rows)
+        label = f"{p:.0%}" if which == "buffer" else (
+            f"{p/1e6:.0f}MB/s" if which == "bandwidth" else f"{int(p)} streams")
+        summary = " ".join(
+            f"{r['policy']}={r['avg_stream_time_s']:.1f}s/{r['io_gb']:.1f}GB"
+            for r in rows
+        )
+        print(f"  micro/{which} @ {label:10s} {summary}", flush=True)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", choices=["buffer", "bandwidth", "streams", "all"],
+                    default="all")
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--extended", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    policies = POLICIES + (EXTENDED if args.extended else [])
+    sweeps = ["buffer", "bandwidth", "streams"] if args.sweep == "all" else [args.sweep]
+    rows = []
+    for s in sweeps:
+        rows.extend(sweep(s, policies, scale=args.scale))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

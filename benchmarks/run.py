@@ -1,0 +1,111 @@
+"""Benchmark driver: one section per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (spec format): for the policy
+benchmarks us_per_call is the simulated avg stream time in microseconds and
+``derived`` is total I/O GB; for roofline rows us_per_call is the binding
+roofline term per step and derived the roofline fraction.
+
+  PYTHONPATH=src:. python -m benchmarks.run            # quick (scaled) pass
+  PYTHONPATH=src:. python -m benchmarks.run --full     # paper-scale sweeps
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_here = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(_here, "..", "src"))
+sys.path.insert(0, os.path.join(_here, ".."))
+
+RESULTS_DIR = os.path.join(_here, "..", "experiments", "results")
+
+
+def _csv(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (minutes); default is a scaled "
+                         "quick pass")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    scale = 1.0 if args.full else 0.25
+
+    from benchmarks import microbench, tpch, sharing, serving_bench, data_bench
+
+    print("# === microbenchmark (paper Figs 11-13) ===", file=sys.stderr)
+    rows = []
+    for s in ("buffer", "bandwidth", "streams"):
+        rows.extend(microbench.sweep(s, microbench.POLICIES, scale=scale))
+    with open(os.path.join(RESULTS_DIR, "micro.json"), "w") as f:
+        json.dump(rows, f, indent=2)
+    for r in rows:
+        _csv(
+            f"micro_{r['sweep']}_{r['point']}_{r['policy']}",
+            r["avg_stream_time_s"] * 1e6,
+            r["io_gb"],
+        )
+
+    print("# === TPC-H throughput (paper Figs 14-16) ===", file=sys.stderr)
+    rows = []
+    for s in ("buffer", "bandwidth", "streams"):
+        rows.extend(tpch.sweep(s, tpch.POLICIES, scale=scale))
+    with open(os.path.join(RESULTS_DIR, "tpch.json"), "w") as f:
+        json.dump(rows, f, indent=2)
+    for r in rows:
+        _csv(
+            f"{r['sweep']}_{r['point']}_{r['policy']}",
+            r["avg_stream_time_s"] * 1e6,
+            r["io_gb"],
+        )
+
+    print("# === sharing potential (paper Figs 17-18) ===", file=sys.stderr)
+    srows = [sharing.analyse("micro", scale), sharing.analyse("tpch", scale)]
+    with open(os.path.join(RESULTS_DIR, "sharing.json"), "w") as f:
+        json.dump(srows, f, indent=2)
+    for r in srows:
+        _csv(f"sharing_{r['workload']}", 0.0, r["reusable_fraction"])
+
+    print("# === serving KV-tier policies (framework) ===", file=sys.stderr)
+    vrows = [serving_bench.run_policy(p) for p in ("lru", "pbm", "belady")]
+    with open(os.path.join(RESULTS_DIR, "serving.json"), "w") as f:
+        json.dump(vrows, f, indent=2)
+    for r in vrows:
+        _csv(f"serve_{r['policy']}", r["steps"] * 1e6, r["swap_gb"])
+
+    print("# === data-pipeline cache (framework) ===", file=sys.stderr)
+    drows = [data_bench.run_policy(p) for p in ("lru", "pbm", "opt")]
+    with open(os.path.join(RESULTS_DIR, "data.json"), "w") as f:
+        json.dump(drows, f, indent=2)
+    for r in drows:
+        _csv(f"datacache_{r['policy']}", r["miss_pages"] * 1e6, r["hit_rate"])
+
+    if not args.skip_roofline:
+        print("# === roofline (from dry-run artifacts) ===", file=sys.stderr)
+        try:
+            from benchmarks import roofline
+
+            rrows = roofline.run()
+            with open(os.path.join(RESULTS_DIR, "roofline.json"), "w") as f:
+                json.dump(rrows, f, indent=2)
+            for r in rrows:
+                if r.get("dominant") == "SKIPPED":
+                    continue
+                _csv(
+                    f"roofline_{r['arch']}_{r['shape']}",
+                    r["bound_s"] * 1e6,
+                    f"{r['roofline_frac']:.4f}",
+                )
+        except Exception as e:  # noqa: BLE001
+            print(f"# roofline unavailable: {e}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Serving-tier benchmark: KV page-pool policies under HBM oversubscription.
+
+The ML-side analogue of the paper's throughput run: many concurrent decode
+requests over an oversubscribed HBM page pool with a shared prompt prefix.
+Compares preemption/spill policies lru / pbm / belady on swap I/O volume
+and completion steps — the serving deployment of the paper's idea
+(DESIGN.md §2, integration 2).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+import numpy as np
+
+from repro.serving import PagePool, Request, ServingEngine
+
+
+def run_policy(policy: str, *, n_requests=32, pool_pages=36, page_size=16,
+               prefix_len=64, max_batch=12, seed=1) -> Dict:
+    pool = PagePool(
+        n_pages=pool_pages, page_size=page_size,
+        page_bytes=page_size * 2 * 8 * 128 * 2,   # tokens*kv*heads*dh*bf16
+    )
+
+    def step_fn(reqs):
+        return [int((r.kv.length * 2654435761) % 50000) for r in reqs]
+
+    eng = ServingEngine(pool, step_fn, policy=policy, max_batch=max_batch)
+    rng = np.random.default_rng(seed)
+    common = list(range(prefix_len))  # shared system prompt
+    lengths = rng.integers(16, 160, n_requests)
+    for i in range(n_requests):
+        eng.submit(Request(
+            prompt=common + list(rng.integers(0, 100, 16)),
+            max_new_tokens=int(lengths[i]),
+        ))
+    st = eng.run_to_completion(max_steps=20_000)
+    return {
+        "policy": policy,
+        "steps": st.steps,
+        "tokens": st.tokens_generated,
+        "tokens_per_step": round(st.tokens_generated / max(1, st.steps), 2),
+        "preemptions": st.preemptions,
+        "shared_prefix_pages": st.shared_prefix_pages,
+        "swap_gb": round((st.swap_out_bytes + st.swap_in_bytes) / 1e9, 4),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--pool-pages", type=int, default=36)
+    args = ap.parse_args()
+    rows = [
+        run_policy(p, n_requests=args.requests, pool_pages=args.pool_pages)
+        for p in ("lru", "pbm", "belady")
+    ]
+    for r in rows:
+        print(f"  serve/{r['policy']:6s} steps={r['steps']:5d} "
+              f"tok/step={r['tokens_per_step']:5.2f} preempt={r['preemptions']:3d} "
+              f"swap={r['swap_gb']:.3f}GB shared={r['shared_prefix_pages']}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

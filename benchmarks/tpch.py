@@ -1,0 +1,108 @@
+"""TPC-H-like throughput run — paper Figures 14, 15, 16.
+
+8 tables / 61 columns, 22 query templates per stream (qgen-style rotated
+permutations), ~7.5GB accessed with 8 streams.  Defaults match the paper's
+operating point: 600 MB/s I/O, buffer = 30% of accessed volume.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+from repro.core import EngineConfig, run_workload, simulate_belady
+from repro.core.workload import make_tpch_db, tpch_accessed_bytes, tpch_streams
+
+POLICIES = ["lru", "cscan", "pbm", "opt"]
+
+DEFAULTS = dict(n_streams=8, bandwidth=600e6, buffer_frac=0.3, seed=7)
+
+
+def one_point(db, policies, *, n_streams, bandwidth, buffer_frac, seed,
+              time_slice=0.1) -> List[Dict]:
+    streams = tpch_streams(db, n_streams=n_streams, seed=seed)
+    ws = tpch_accessed_bytes(db, streams)
+    rows = []
+    pbm_trace = None
+    for pol in policies:
+        cfg = EngineConfig(
+            bandwidth=bandwidth,
+            buffer_bytes=max(1 << 22, int(buffer_frac * ws)),
+            sample_interval=5.0,
+            record_trace=(pol == "pbm"),
+            pbm_time_slice=time_slice,
+        )
+        t0 = time.time()
+        r = run_workload(db, streams, pol, cfg)
+        rows.append({
+            "policy": pol,
+            "avg_stream_time_s": round(r.avg_stream_time, 3),
+            "io_gb": round(r.io_gb, 3),
+            "wall_s": round(time.time() - t0, 2),
+        })
+        if pol == "pbm":
+            pbm_trace = (r.trace, r.page_sizes)
+    if pbm_trace is not None and "opt" in policies:
+        trace, sizes = pbm_trace
+        _, missed = simulate_belady(
+            trace, page_sizes=sizes,
+            capacity_bytes=max(1 << 22, int(buffer_frac * ws)),
+        )
+        for row in rows:
+            if row["policy"] == "opt":
+                row["io_gb_belady_trace"] = round(missed / 1e9, 3)
+    return rows
+
+
+def sweep(which: str, policies: List[str], scale: float = 1.0, seed: int = 7):
+    db = make_tpch_db(scale=scale)
+    points = {
+        "buffer": [0.1, 0.2, 0.3, 0.45, 0.6, 0.8],
+        "bandwidth": [200e6, 400e6, 600e6, 900e6, 1200e6, 1600e6],
+        "streams": [1, 2, 4, 8, 16, 24],
+    }[which]
+    out = []
+    for p in points:
+        kw = dict(DEFAULTS)
+        kw["seed"] = seed
+        if which == "buffer":
+            kw["buffer_frac"] = p
+        elif which == "bandwidth":
+            kw["bandwidth"] = p
+        else:
+            kw["n_streams"] = int(p)
+        rows = one_point(db, policies, **kw)
+        for r in rows:
+            r["sweep"] = f"tpch_{which}"
+            r["point"] = p
+        out.extend(rows)
+        label = f"{p:.0%}" if which == "buffer" else (
+            f"{p/1e6:.0f}MB/s" if which == "bandwidth" else f"{int(p)} streams")
+        summary = " ".join(
+            f"{r['policy']}={r['avg_stream_time_s']:.1f}s/{r['io_gb']:.1f}GB"
+            for r in rows
+        )
+        print(f"  tpch/{which} @ {label:10s} {summary}", flush=True)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", choices=["buffer", "bandwidth", "streams", "all"],
+                    default="all")
+    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    sweeps = ["buffer", "bandwidth", "streams"] if args.sweep == "all" else [args.sweep]
+    rows = []
+    for s in sweeps:
+        rows.extend(sweep(s, POLICIES, scale=args.scale))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

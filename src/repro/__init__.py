@@ -1,0 +1,4 @@
+"""repro: Predictive Buffer Management (VLDB'12) as a first-class feature of
+a multi-pod JAX training/serving framework. See DESIGN.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,26 @@
+"""Core of the reproduction: the paper's storage model, scan operators,
+buffer-management policies (LRU/MRU, Cooperative Scans' ABM, PBM, OPT, and
+the paper's sketched-but-unbuilt PBM/LRU and Attach&Throttle variants), and
+the concurrent-scan execution engine + workloads of the evaluation."""
+
+from .pages import Column, Database, Page, PageId, Table
+from .pdt import PDT, CScanMergeState
+from .snapshots import Snapshot, SnapshotManager, classify_chunks
+from .scans import ScanSpec, ScanState
+from .engine import Engine, EngineConfig, EngineResult, run_workload
+from .policies.base import BufferPool, Policy
+from .policies.lru import LRUPolicy, MRUPolicy
+from .policies.pbm import PBMPolicy
+from .policies.opt import OraclePolicy, simulate_belady
+from .policies.cscan import ABM
+from .policies.pbm_lru import PBMLRUPolicy
+from .policies.attach_throttle import AttachThrottlePBM
+
+__all__ = [
+    "ABM", "AttachThrottlePBM", "BufferPool", "Column", "CScanMergeState",
+    "Database", "Engine", "EngineConfig", "EngineResult", "LRUPolicy",
+    "MRUPolicy", "OraclePolicy", "PBMLRUPolicy", "PBMPolicy", "PDT", "Page",
+    "PageId", "Policy", "ScanSpec", "ScanState", "Snapshot",
+    "SnapshotManager", "Table", "classify_chunks", "run_workload",
+    "simulate_belady",
+]

@@ -1,0 +1,12 @@
+from .base import BufferPool, Policy
+from .lru import LRUPolicy, MRUPolicy
+from .pbm import PBMPolicy
+from .opt import OraclePolicy, simulate_belady
+from .cscan import ABM
+from .pbm_lru import PBMLRUPolicy
+from .attach_throttle import AttachThrottlePBM
+
+__all__ = [
+    "ABM", "AttachThrottlePBM", "BufferPool", "LRUPolicy", "MRUPolicy",
+    "OraclePolicy", "PBMLRUPolicy", "PBMPolicy", "Policy", "simulate_belady",
+]

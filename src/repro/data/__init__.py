@@ -1,0 +1,8 @@
+from .dataset import PAGE_TOKENS, DatasetSpec, generate_page, make_dataset_db
+from .cache import HostPageCache
+from .pipeline import DataStream, MultiStreamLoader
+
+__all__ = [
+    "DataStream", "DatasetSpec", "HostPageCache", "MultiStreamLoader",
+    "PAGE_TOKENS", "generate_page", "make_dataset_db",
+]

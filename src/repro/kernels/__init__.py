@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the perf-critical compute layers, with jnp
+oracles (ref.py) and backend dispatch (ops.py).
+
+  paged_attention — decode attention through a page table (PBM-managed KV)
+  flash_attention — prefill/training attention (causal + sliding window)
+  mamba2_scan     — chunked SSD selective scan (zamba2)
+  mlstm_chunked   — chunkwise mLSTM matrix memory (xlstm)
+"""
+
+from . import ops, ref
+from .ops import (
+    flash_attention, get_backend, mamba2_scan, mlstm_chunked,
+    paged_attention, set_backend,
+)
+
+__all__ = [
+    "flash_attention", "get_backend", "mamba2_scan", "mlstm_chunked", "ops",
+    "paged_attention", "ref", "set_backend",
+]

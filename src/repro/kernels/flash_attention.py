@@ -1,0 +1,139 @@
+"""Flash attention (prefill/training) — causal + sliding-window, TPU tiling.
+
+Grid = (batch*heads, q_blocks, kv_blocks), kv innermost so the online-softmax
+state (m, l, acc) for one q-block lives in VMEM scratch across kv steps.
+Blocks are (block_q, dh) x (block_kv, dh) with dh lane-aligned (128/256) and
+block_q/block_kv multiples of the 8-sublane tile; the (block_q, block_kv)
+score tile feeds the MXU.  Causality is enforced by masking; fully-masked
+kv blocks are skipped with ``pl.when`` (no FLOPs burned above the diagonal).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,    # (1, block_q, dh)
+    k_ref,    # (1, block_kv, dh)
+    v_ref,    # (1, block_kv, dh)
+    o_ref,    # (1, block_q, dh)
+    m_ref,    # (block_q, 1)
+    l_ref,    # (block_q, 1)
+    acc_ref,  # (block_q, dh)
+    *,
+    block_q: int,
+    block_kv: int,
+    n_kv: int,
+    causal: bool,
+    window: Optional[int],
+    seq_q: int,
+    seq_kv: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_kv
+    # block-level skip: in causal mode a kv block strictly above the diagonal
+    # contributes nothing; with a window, blocks entirely behind it neither.
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        needed = jnp.logical_and(
+            needed, k_start + block_kv - 1 >= q_start - (window - 1)
+        ) if causal else needed
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        dh = q.shape[-1]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * (dh ** -0.5)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        rel = qpos - kpos
+        mask = jnp.logical_and(qpos < seq_q, kpos < seq_kv)
+        if causal:
+            mask = jnp.logical_and(mask, rel >= 0)
+        if window is not None:
+            mask = jnp.logical_and(mask, rel < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...][:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_ref[...] = (l_ref[...][:, 0] * alpha + p.sum(axis=-1))[:, None]
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ()))
+        )
+        m_ref[...] = m_new[:, None]
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...][:, 0], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,   # (B, T, H, dh)
+    k: jax.Array,   # (B, S, H, dh)  (KV heads pre-expanded to H)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    nq = (t + block_q - 1) // block_q
+    nk = (s + block_kv - 1) // block_kv
+    tp, sp = nq * block_q, nk * block_kv
+    qp = jnp.pad(q, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    q_r = qp.transpose(0, 2, 1, 3).reshape(b * h, tp, dh)
+    k_r = kp.transpose(0, 2, 1, 3).reshape(b * h, sp, dh)
+    v_r = vp.transpose(0, 2, 1, 3).reshape(b * h, sp, dh)
+
+    grid = (b * h, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, block_q=block_q, block_kv=block_kv, n_kv=nk,
+            causal=causal, window=window, seq_q=t, seq_kv=s,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, dh), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_kv, dh), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((b * h, tp, dh), q.dtype),
+        interpret=interpret,
+    )(q_r, k_r, v_r)
+    return out.reshape(b, h, tp, dh).transpose(0, 2, 1, 3)[:, :t]

@@ -1,0 +1,112 @@
+"""Chunked SSD (Mamba2) scan kernel — TPU-native selective scan.
+
+The CUDA selective-scan is a warp-level sequential scan; the TPU-idiomatic
+formulation makes the intra-chunk work dense matmuls (MXU) and carries the
+(P x N) SSM state across chunks in VMEM scratch:
+
+  grid = (batch, head, chunk)   — chunk innermost, so the state scratch
+                                   persists across a (batch, head)'s chunks
+  blocks: xh (Q, P), a (Q,), b/c (Q, N); Q = chunk length (sublane-aligned),
+  P = head dim, N = state dim (64/128 — lane-aligned enough; P=64 pads to
+  the 128 lane but the (Q,Q) and (Q,N) matmuls dominate).
+
+Per chunk:  L = exp(segsum(log a))  (Q,Q, causal-masked)
+            y_intra = (C B^T . L) X
+            y_inter = C h_prev^T . exp(cumlog a)
+            h_new   = h_prev * exp(total) + (B * decay_to_end)^T X
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(
+    xh_ref,   # (1, chunk, 1, P)
+    a_ref,    # (1, chunk, 1)
+    b_ref,    # (1, chunk, N)
+    c_ref,    # (1, chunk, N)
+    y_ref,    # (1, chunk, 1, P)
+    h_ref,    # (P, N) f32 scratch — carried SSM state
+    *,
+    chunk: int,
+    n_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = xh_ref[0, :, 0, :].astype(jnp.float32)       # (Q, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)           # (Q,)
+    b = b_ref[0].astype(jnp.float32)                 # (Q, N)
+    c = c_ref[0].astype(jnp.float32)                 # (Q, N)
+
+    loga = jnp.log(jnp.clip(a, 1e-20, None))
+    cum = jnp.cumsum(loga)                           # (Q,)
+    total = cum[-1]
+    # intra-chunk decay matrix L[q, s] = exp(cum_q - cum_s), q >= s
+    li = cum[:, None] - cum[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(mask, jnp.exp(li), 0.0)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())))   # (Q, Q)
+    y_intra = jax.lax.dot_general(cb * L, x, (((1,), (0,)), ((), ())))
+
+    # inter-chunk: contribution of the carried state
+    dstart = jnp.exp(cum)                            # (Q,)
+    ch = jax.lax.dot_general(c, h_ref[...], (((1,), (1,)), ((), ())))  # (Q, P)
+    y_inter = ch * dstart[:, None]
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h = h * exp(total) + sum_s decay_to_end_s * x_s B_s^T
+    dte = jnp.exp(total - cum)                       # (Q,)
+    xw = x * dte[:, None]                            # (Q, P)
+    hb = jax.lax.dot_general(xw, b, (((0,), (0,)), ((), ())))  # (P, N)
+    h_ref[...] = h_ref[...] * jnp.exp(total) + hb
+
+
+def mamba2_scan_kernel(
+    xh: jax.Array,   # (B, T, H, P)
+    a: jax.Array,    # (B, T, H)
+    b: jax.Array,    # (B, T, N)  (shared across heads, ngroups=1)
+    c: jax.Array,    # (B, T, N)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, T, H, P = xh.shape
+    N = b.shape[-1]
+    nc = (T + chunk - 1) // chunk
+    Tp = nc * chunk
+    if Tp != T:
+        xh = jnp.pad(xh, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, Tp - T), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, Tp - T), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, Tp - T), (0, 0)))
+
+    grid = (B, H, nc)
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, n_chunks=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, chunk, N), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, chunk, 1, P), lambda bi, hi, ci: (bi, ci, hi, 0)
+        ),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((B, Tp, H, P), xh.dtype),
+        interpret=interpret,
+    )(xh, a, b, c)
+    return out[:, :T]

@@ -1,0 +1,118 @@
+"""Chunkwise mLSTM kernel (xLSTM matrix memory) — gated linear attention.
+
+Same chunked structure as the SSD kernel, but keys/queries are per-head and
+a (K,) normalizer state n rides along with the (K, P) matrix memory C:
+
+  C_t = a_t C_{t-1} + i_t k_t v_t^T        n_t = a_t n_{t-1} + i_t k_t
+  y_t = (q_t C_t) / max(|q_t n_t|, 1)
+
+grid = (batch, head, chunk); scratch: C (K, P) + n (K, 1) f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _kernel(
+    q_ref,   # (1, chunk, 1, K)
+    k_ref,   # (1, chunk, 1, K)
+    v_ref,   # (1, chunk, 1, P)
+    a_ref,   # (1, chunk, 1)
+    i_ref,   # (1, chunk, 1)
+    y_ref,   # (1, chunk, 1, P)
+    C_ref,   # (K, P) f32 scratch
+    n_ref,   # (K, 1) f32 scratch
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    K = q_ref.shape[-1]
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * (K ** -0.5)  # (Q, K)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)                # (Q, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)                   # (Q,)
+    ig = i_ref[0, :, 0].astype(jnp.float32)
+
+    loga = jnp.log(jnp.clip(a, 1e-20, None))
+    cum = jnp.cumsum(loga)
+    total = cum[-1]
+    li = cum[:, None] - cum[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(mask, jnp.exp(li), 0.0)
+    qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (Q, Q)
+    w = qk * L * ig[None, :]
+    y_intra = jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())))
+    nrm_intra = w.sum(axis=-1)                                # (Q,)
+
+    dstart = jnp.exp(cum)
+    y_inter = jax.lax.dot_general(
+        q, C_ref[...], (((1,), (0,)), ((), ()))
+    ) * dstart[:, None]
+    nrm_inter = jax.lax.dot_general(
+        q, n_ref[...], (((1,), (0,)), ((), ()))
+    )[:, 0] * dstart
+    nrm = jnp.maximum(jnp.abs(nrm_intra + nrm_inter), 1.0)
+    y_ref[0, :, 0, :] = ((y_intra + y_inter) / nrm[:, None]).astype(y_ref.dtype)
+
+    dte = jnp.exp(total - cum) * ig                           # (Q,)
+    kw = k * dte[:, None]                                     # (Q, K)
+    C_ref[...] = C_ref[...] * jnp.exp(total) + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ()))
+    )
+    n_ref[...] = n_ref[...] * jnp.exp(total) + kw.sum(axis=0)[:, None]
+
+
+def mlstm_chunked_kernel(
+    q: jax.Array,   # (B, T, H, K)
+    k: jax.Array,
+    v: jax.Array,   # (B, T, H, P)
+    a: jax.Array,   # (B, T, H) forget gate in (0,1]
+    i: jax.Array,   # (B, T, H) input gate
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, T, H, K = q.shape
+    P = v.shape[-1]
+    nc = (T + chunk - 1) // chunk
+    Tp = nc * chunk
+    if Tp != T:
+        pad4 = ((0, 0), (0, Tp - T), (0, 0), (0, 0))
+        pad3 = ((0, 0), (0, Tp - T), (0, 0))
+        q = jnp.pad(q, pad4)
+        k = jnp.pad(k, pad4)
+        v = jnp.pad(v, pad4)
+        a = jnp.pad(a, pad3, constant_values=1.0)
+        i = jnp.pad(i, pad3)
+
+    grid = (B, H, nc)
+    qkv_spec = lambda last: pl.BlockSpec(
+        (1, chunk, 1, last), lambda bi, hi, ci: (bi, ci, hi, 0)
+    )
+    gate_spec = pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi))
+    out = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[qkv_spec(K), qkv_spec(K), qkv_spec(P), gate_spec, gate_spec],
+        out_specs=qkv_spec(P),
+        scratch_shapes=[
+            pltpu.VMEM((K, P), jnp.float32),
+            pltpu.VMEM((K, 1), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, Tp, H, P), v.dtype),
+        interpret=interpret,
+    )(q, k, v, a, i)
+    return out[:, :T]

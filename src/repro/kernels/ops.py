@@ -1,0 +1,95 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+Backend policy (process-global, settable):
+  * "auto"      — Pallas on TPU, jnp reference elsewhere (CPU dry-run/test)
+  * "pallas"    — force the compiled Pallas path (real TPU)
+  * "interpret" — Pallas kernel body interpreted in Python (CPU correctness)
+  * "reference" — force the jnp oracle
+
+The model code calls these wrappers, so swapping kernels on/off never touches
+model definitions — and the dry-run lowers the reference path (XLA HLO),
+which is what cost_analysis reads.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_kernel
+from .mamba2_scan import mamba2_scan_kernel
+from .mlstm import mlstm_chunked_kernel
+from .paged_attention import paged_attention_kernel
+
+_BACKEND = "auto"
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("auto", "pallas", "interpret", "reference"), name
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def _use_pallas() -> Optional[bool]:
+    """True = compiled pallas, False = reference, None -> interpret."""
+    if _BACKEND == "pallas":
+        return True
+    if _BACKEND == "reference":
+        return False
+    if _BACKEND == "interpret":
+        return None
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=())
+def paged_attention(q, k_pages, v_pages, page_table, seq_lens):
+    mode = _use_pallas()
+    if mode is True:
+        return paged_attention_kernel(q, k_pages, v_pages, page_table, seq_lens)
+    if mode is None:
+        return paged_attention_kernel(
+            q, k_pages, v_pages, page_table, seq_lens, interpret=True
+        )
+    return ref.paged_attention_ref(q, k_pages, v_pages, page_table, seq_lens)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window"))
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None):
+    mode = _use_pallas()
+    if mode is True:
+        return flash_attention_kernel(q, k, v, causal=causal, window=window)
+    if mode is None:
+        return flash_attention_kernel(
+            q, k, v, causal=causal, window=window,
+            block_q=64, block_kv=64, interpret=True,
+        )
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mamba2_scan(xh, a, b, c, chunk: int = 128):
+    mode = _use_pallas()
+    if mode is True:
+        return mamba2_scan_kernel(xh, a, b, c, chunk=chunk)
+    if mode is None:
+        return mamba2_scan_kernel(xh, a, b, c, chunk=chunk, interpret=True)
+    y, _ = ref.mamba2_scan_ref(xh, a, b, c)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mlstm_chunked(q, k, v, a, i, chunk: int = 128):
+    mode = _use_pallas()
+    if mode is True:
+        return mlstm_chunked_kernel(q, k, v, a, i, chunk=chunk)
+    if mode is None:
+        return mlstm_chunked_kernel(q, k, v, a, i, chunk=chunk, interpret=True)
+    return ref.gla_ref(q, k, v, a, i)

@@ -1,0 +1,144 @@
+"""Paged decode attention — the kernel-level realisation of PBM-managed KV.
+
+One decode step reads K/V through a **page table**: the KV cache lives in a
+pool of fixed-size pages (non-contiguous in HBM), exactly the structure the
+serving tier's PBM policy manages (``repro.serving``).  TPU-native design:
+
+* ``PrefetchScalarGridSpec`` prefetches the page table; the K/V BlockSpec
+  ``index_map`` reads it, so the DMA engine gathers pages HBM->VMEM *by
+  table lookup* — no materialised gather, no contiguity requirement.  This
+  replaces the CUDA approach (warp-per-page gather) with Mosaic's
+  grid-indexed DMA, per the hardware-adaptation note in DESIGN.md.
+* Grid = (batch, kv_head, page); the page axis is innermost, so the online-
+  softmax accumulator lives in VMEM scratch across page steps of one
+  (batch, head) and is written once at the last page.
+* Blocks: q (G, dh) with G = query heads per KV head (GQA group), K/V page
+  (page_size, dh).  dh is 128/256 (lane-aligned); page_size a multiple of 8
+  (sublane-aligned); the (G, page_size) score tile hits the MXU.
+
+Numerics: f32 accumulation, online softmax with running max — validated
+against ``ref.paged_attention_ref`` in interpret mode (tests sweep shapes,
+dtypes, GQA ratios, ragged lengths).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    # scalar prefetch
+    page_table_ref,   # (B, pages_per_seq) int32
+    seq_lens_ref,     # (B,) int32
+    # blocks
+    q_ref,            # (1, 1, G, dh)
+    k_ref,            # (1, page_size, dh)
+    v_ref,            # (1, page_size, dh)
+    o_ref,            # (1, 1, G, dh)
+    # scratch
+    m_ref,            # (G, 1) f32 running max
+    l_ref,            # (G, 1) f32 running denom
+    acc_ref,          # (G, dh) f32 numerator
+    *,
+    page_size: int,
+    pages_per_seq: int,
+):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, dh)
+    k = k_ref[0].astype(jnp.float32)               # (S, dh)
+    v = v_ref[0].astype(jnp.float32)               # (S, dh)
+    dh = q.shape[-1]
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ()))
+    ) * (dh ** -0.5)                                # (G, S)
+
+    pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    valid = pos < seq_lens_ref[b]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_ref[...][:, 0]                       # (G,)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)                 # (G,)
+    probs = jnp.exp(scores - m_new[:, None])        # (G, S)
+    probs = jnp.where(valid, probs, 0.0)
+    l_ref[...] = (l_ref[...][:, 0] * alpha + probs.sum(axis=-1))[:, None]
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        probs, v, (((1,), (0,)), ((), ()))
+    )
+    m_ref[...] = m_new[:, None]
+
+    @pl.when(p == pages_per_seq - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...][:, 0], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(
+    q: jax.Array,            # (B, H, dh)
+    k_pages: jax.Array,      # (n_pages, page_size, Hk, dh)
+    v_pages: jax.Array,      # (n_pages, page_size, Hk, dh)
+    page_table: jax.Array,   # (B, pages_per_seq) int32 — pool page ids
+    seq_lens: jax.Array,     # (B,) int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, dh = q.shape
+    n_pages, page_size, hk, _ = k_pages.shape
+    assert h % hk == 0, (h, hk)
+    g = h // hk
+    pages_per_seq = page_table.shape[1]
+
+    # (B, Hk, G, dh) view of queries: one grid row per KV head
+    q_r = q.reshape(b, hk, g, dh)
+    # move the kv-head axis outward so K/V blocks are (1, page_size, dh)
+    k_r = k_pages.transpose(2, 0, 1, 3).reshape(hk * n_pages, page_size, dh)
+    v_r = v_pages.transpose(2, 0, 1, 3).reshape(hk * n_pages, page_size, dh)
+
+    grid = (b, hk, pages_per_seq)
+
+    def q_map(bi, hi, pi, pt, sl):
+        return (bi, hi, 0, 0)
+
+    def kv_map(bi, hi, pi, pt, sl):
+        return (hi * n_pages + pt[bi, pi], 0, 0)
+
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), q_map),
+            pl.BlockSpec((1, page_size, dh), kv_map),
+            pl.BlockSpec((1, page_size, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, page_size=page_size, pages_per_seq=pages_per_seq
+        ),
+        grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((b, hk, g, dh), q.dtype),
+        interpret=interpret,
+    )(page_table, seq_lens, q_r, k_r, v_r)
+    return out.reshape(b, h, dh)

@@ -1,0 +1,130 @@
+"""Pure-jnp oracles for every kernel.
+
+Deliberately *naive* implementations (full softmax, sequential recurrences)
+— obviously correct, used by tests to validate both the Pallas kernels
+(interpret mode) and the fast chunked jnp paths in ``repro.models``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(
+    q: jax.Array,            # (B, H, dh)
+    k_pages: jax.Array,      # (n_pages, page_size, Hk, dh)
+    v_pages: jax.Array,      # (n_pages, page_size, Hk, dh)
+    page_table: jax.Array,   # (B, pages_per_seq)
+    seq_lens: jax.Array,     # (B,)
+) -> jax.Array:
+    b, h, dh = q.shape
+    n_pages, page_size, hk, _ = k_pages.shape
+    g = h // hk
+    pages = page_table.shape[1]
+    # gather the full (ragged) K/V per sequence, then plain masked softmax
+    k_seq = k_pages[page_table]                     # (B, pages, S, Hk, dh)
+    v_seq = v_pages[page_table]
+    k_seq = k_seq.reshape(b, pages * page_size, hk, dh)
+    v_seq = v_seq.reshape(b, pages * page_size, hk, dh)
+    qf = q.reshape(b, hk, g, dh).astype(jnp.float32)
+    kf = k_seq.astype(jnp.float32)
+    vf = v_seq.astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qf, kf) * (dh ** -0.5)
+    valid = jnp.arange(pages * page_size)[None, :] < seq_lens[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, vf)
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
+def flash_attention_ref(
+    q: jax.Array,            # (B, T, H, dh)
+    k: jax.Array,            # (B, S, H, dh)
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    scores = jnp.einsum(
+        "bthd,bshd->bhts", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (dh ** -0.5)
+    rel = jnp.arange(t)[:, None] - jnp.arange(s)[None, :] + (s - t)
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= rel >= 0
+    if window is not None:
+        mask &= rel < window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mamba2_scan_ref(
+    xh: jax.Array,   # (B, T, H, P)
+    a: jax.Array,    # (B, T, H) decay in (0,1]
+    b: jax.Array,    # (B, T, N)
+    c: jax.Array,    # (B, T, N)
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential SSM recurrence: h_t = a_t h_{t-1} + B_t x_t^T; y_t = C_t.h_t."""
+    B, T, H, P = xh.shape
+    N = b.shape[-1]
+    f32 = jnp.float32
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), f32)
+
+    def step(h, inp):
+        x_t, a_t, b_t, c_t = inp
+        h = h * a_t[:, :, None, None] + jnp.einsum(
+            "bn,bhp->bhpn", b_t.astype(f32), x_t.astype(f32)
+        )
+        y = jnp.einsum("bn,bhpn->bhp", c_t.astype(f32), h)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(xh, 1, 0),
+        jnp.moveaxis(a, 1, 0),
+        jnp.moveaxis(b, 1, 0),
+        jnp.moveaxis(c, 1, 0),
+    )
+    h_f, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), h_f
+
+
+def gla_ref(
+    q: jax.Array,    # (B, T, H, K)
+    k: jax.Array,
+    v: jax.Array,    # (B, T, H, P)
+    a: jax.Array,    # (B, T, H)
+    i: jax.Array,    # (B, T, H)
+) -> jax.Array:
+    """Sequential mLSTM recurrence (matrix memory + normalizer)."""
+    B, T, H, K = q.shape
+    P = v.shape[-1]
+    f32 = jnp.float32
+    C0 = jnp.zeros((B, H, K, P), f32)
+    n0 = jnp.zeros((B, H, K), f32)
+    scale = K ** -0.5
+
+    def step(carry, inp):
+        C, n = carry
+        q_t, k_t, v_t, a_t, i_t = inp
+        C = C * a_t[:, :, None, None] + i_t[:, :, None, None] * jnp.einsum(
+            "bhk,bhp->bhkp", k_t.astype(f32), v_t.astype(f32)
+        )
+        n = n * a_t[:, :, None] + i_t[:, :, None] * k_t.astype(f32)
+        qs = q_t.astype(f32) * scale
+        num = jnp.einsum("bhk,bhkp->bhp", qs, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qs, n)), 1.0)
+        return (C, n), num / den[..., None]
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, a, i))
+    _, ys = jax.lax.scan(step, (C0, n0), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype)

@@ -1,0 +1,118 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every (arch x shape) cell.
+
+``input_specs`` builds the abstract batch for a cell; ``cell_shardings``
+builds the full (params, [cache/opt], batch) PartitionSpec trees the dry-run
+passes as jit in_shardings.  Nothing here allocates device memory.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, mesh_rules
+from repro.models import param_shardings
+from repro.models.transformer import Model
+
+ENC_SRC_LEN = 4096  # serving-time encoder length for the enc-dec arch
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract model inputs for one cell (batch dict of ShapeDtypeStruct)."""
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            p = cfg.frontend_tokens
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, T - p), i32),
+                "patch_embeds": jax.ShapeDtypeStruct((B, p, cfg.d_model), jnp.bfloat16),
+            }
+        if cfg.is_encdec:
+            return {
+                "src_embeds": jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.bfloat16),
+                "tgt_tokens": jax.ShapeDtypeStruct((B, T), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, T), i32)}
+    # decode: one new token against a cache of length T
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeConfig, rules) -> Dict[str, Any]:
+    dp = rules["batch"]
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            return {"tokens": P(dp), "patch_embeds": P(dp)}
+        if cfg.is_encdec:
+            return {"src_embeds": P(dp), "tgt_tokens": P(dp)}
+        return {"tokens": P(dp)}
+    return {"token": P(dp), "pos": P()}
+
+
+def cache_shardings(cfg: ArchConfig, shape: ShapeConfig, rules, cache_tree) -> Any:
+    """PartitionSpecs for the serve cache tree, matched by structure."""
+    dp = rules["batch"]
+    kvs = rules["kv_seq"]
+
+    def kv_spec(leaf_shape) -> P:
+        # (L, B, S, Hk, Dh) contiguous KV cache
+        return P(None, dp, kvs, None, None)
+
+    def spec_for(path: Tuple[str, ...], leaf) -> P:
+        nd = len(leaf.shape)
+        name = path[-1]
+        if name in ("k", "v", "attn_k", "attn_v"):
+            if nd == 5:
+                return P(None, dp, kvs, None, None)
+            return P(dp, kvs, None, None)
+        if name == "mamba_h":            # (L, B, H, P, N)
+            return P(None, dp, "model", None, None)
+        if name == "mamba_conv":         # (L, B, K-1, C)
+            return P(None, dp, None, "model")
+        if name in ("mC",):              # (G, nm, B, H, K, K)
+            return P(None, None, dp, None, "model", None)
+        if name in ("mN",):              # (G, nm, B, H, K)
+            return P(None, None, dp, None, "model")
+        if name in ("sc", "sn", "sh", "sm"):  # (G, B, H, dh)
+            return P(None, dp, None, None)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    out = []
+    for path, leaf in flat:
+        names = tuple(
+            p.key if hasattr(p, "key") else str(p) for p in path
+        )
+        out.append(spec_for(names, leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cell_mode(cfg: ArchConfig, shape: ShapeConfig) -> str:
+    if shape.kind == "decode":
+        return "decode_long" if shape.global_batch == 1 else "decode"
+    return "train"
+
+
+def cell_shardings(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    model: Model,
+    mesh,
+    cache_tree: Optional[Any] = None,
+):
+    """(param_specs, batch_specs, cache_specs?) PartitionSpec trees."""
+    rules = mesh_rules(cell_mode(cfg, shape), mesh.axis_names)
+    p_specs = param_shardings(model.param_specs, rules, mesh=mesh)
+    b_specs = batch_shardings(cfg, shape, rules)
+    c_specs = (
+        cache_shardings(cfg, shape, rules, cache_tree)
+        if cache_tree is not None
+        else None
+    )
+    return p_specs, b_specs, c_specs

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Single pod: TPU v5e 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 pods x 256 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis carries only data parallelism + gradient all-reduce (DCN-friendly:
+no model-sharded collective ever crosses the pod boundary).
+
+A FUNCTION (not a module constant) so importing never touches jax device
+state; the dry-run forces 512 host devices *before* calling this.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1, data: Optional[int] = None):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    import math
+
+    return math.prod(mesh.devices.shape)

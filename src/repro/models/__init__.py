@@ -1,0 +1,9 @@
+from .transformer import Model, build_model
+from .layers import (
+    ParamSpec, abstract_params, init_params, param_shardings, tree_paths,
+)
+
+__all__ = [
+    "Model", "ParamSpec", "abstract_params", "build_model", "init_params",
+    "param_shardings", "tree_paths",
+]

@@ -1,0 +1,240 @@
+"""Grouped-query attention: training/prefill (chunked flash-style), decode
+(contiguous or paged KV cache), cross-attention, sliding windows.
+
+Memory discipline: prefill/train attention never materialises the full
+(T, T) score matrix — a ``lax.scan`` over query blocks keeps the working set
+at (B, H, block, T) like flash attention (the Pallas kernel in
+``repro.kernels`` is the TPU-optimised realisation; this jnp path is the
+oracle and the CPU/dry-run path — identical FLOPs, fusable by XLA).
+
+Decode reads the KV cache with q-length 1; the cache sequence axis is
+sharded over "model" (flash-decode style) per ``configs.base.mesh_rules`` —
+XLA inserts the partial-softmax combine collectives automatically.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import ParamSpec, apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_specs(cfg: ArchConfig, cross: bool = False) -> Dict[str, ParamSpec]:
+    d, dh = cfg.d_model, cfg.head_dim_
+    h, hk = cfg.n_heads, cfg.n_kv_heads
+    specs = {
+        "wq": ParamSpec((d, h * dh), ("embed", "q_dim")),
+        "wk": ParamSpec((d, hk * dh), ("embed", "q_dim")),
+        "wv": ParamSpec((d, hk * dh), ("embed", "q_dim")),
+        "wo": ParamSpec((h * dh, d), ("q_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((h * dh,), ("q_dim",), init="zeros")
+        specs["bk"] = ParamSpec((hk * dh,), ("q_dim",), init="zeros")
+        specs["bv"] = ParamSpec((hk * dh,), ("q_dim",), init="zeros")
+    return specs
+
+
+def _project_qkv(
+    params: Mapping[str, jax.Array],
+    x: jax.Array,
+    kv_src: jax.Array,
+    cfg: ArchConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    dh = cfg.head_dim_
+    q = jnp.einsum("...d,df->...f", x, params["wq"])
+    k = jnp.einsum("...d,df->...f", kv_src, params["wk"])
+    v = jnp.einsum("...d,df->...f", kv_src, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(*q.shape[:-1], cfg.n_heads, dh)
+    k = k.reshape(*k.shape[:-1], cfg.n_kv_heads, dh)
+    v = v.reshape(*v.shape[:-1], cfg.n_kv_heads, dh)
+    return q, k, v
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, Hk, Dh) -> (B, S, H, Dh) by GQA group broadcast."""
+    hk = k.shape[-2]
+    if hk == n_heads:
+        return k
+    reps = n_heads // hk
+    return jnp.repeat(k, reps, axis=-2)
+
+
+def blocked_attention(
+    q: jax.Array,            # (B, T, H, Dh)
+    k: jax.Array,            # (B, S, Hk, Dh) — GQA heads, NOT pre-expanded
+    v: jax.Array,            # (B, S, Hk, Dh)
+    causal: bool,
+    window: Optional[Any] = None,   # int or traced scalar; None = unbounded
+    q_offset: int = 0,
+    block: int = 512,
+) -> jax.Array:
+    """Flash-style attention: scan over query blocks, full K per block.
+
+    GQA is computed in grouped form (B, Hk, G, ...) — the KV heads are never
+    materialised H/Hk times (§Perf: the jnp.repeat expansion showed up as an
+    8x bytes/collective multiplier in the dry-run HLO).  f32 accumulation
+    happens inside the dots via preferred_element_type, not via f32 copies.
+    """
+    b, t, h, dh = q.shape
+    s, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = dh ** -0.5
+    nblk = max(1, (t + block - 1) // block)
+    pad = nblk * block - t
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(b, nblk, block, hk, g, dh).transpose(1, 0, 3, 4, 2, 5)
+    # (n, B, Hk, G, blk, Dh)
+    kpos = jnp.arange(s)
+    f32 = jnp.float32
+
+    def one_block(carry, inp):
+        qi, blk_idx = inp
+        scores = jnp.einsum(
+            "bkgqd,bskd->bkgqs", qi, k, preferred_element_type=f32
+        ) * scale
+        qpos = q_offset + blk_idx * block + jnp.arange(block)
+        rel = qpos[:, None] - kpos[None, :]
+        mask = jnp.ones((block, s), dtype=bool)
+        if causal:
+            mask &= rel >= 0
+        if window is not None:
+            mask &= rel < window
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum(
+            "bkgqs,bskd->bkgqd", probs, v, preferred_element_type=f32
+        )
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(
+        one_block, None, (qb, jnp.arange(nblk)), length=nblk
+    )  # (n, B, Hk, G, blk, Dh)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, nblk * block, h, dh)
+    return out[:, :t]
+
+
+def mha_train(
+    params: Mapping[str, jax.Array],
+    x: jax.Array,                      # (B, T, d)
+    cfg: ArchConfig,
+    positions: Optional[jax.Array] = None,
+    window: Optional[Any] = None,
+    causal: bool = True,
+    kv_src: Optional[jax.Array] = None,  # cross-attention source
+    rope: bool = True,
+) -> jax.Array:
+    b, t, _ = x.shape
+    src = kv_src if kv_src is not None else x
+    q, k, v = _project_qkv(params, x, src, cfg)
+    if positions is None:
+        positions = jnp.arange(t)[None, :]
+    if rope and kv_src is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    out = blocked_attention(q, k, v, causal=causal and kv_src is None,
+                            window=window)
+    out = out.reshape(b, t, cfg.n_heads * cfg.head_dim_)
+    return jnp.einsum("...f,fd->...d", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# decode path (one new token, contiguous KV cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(
+    cfg: ArchConfig, batch: int, max_len: int, n_layers: Optional[int] = None,
+    dtype: Any = jnp.bfloat16,
+) -> Dict[str, jax.Array]:
+    L = n_layers if n_layers is not None else cfg.n_layers
+    shape = (L, batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_specs(
+    cfg: ArchConfig, batch: int, max_len: int, n_layers: Optional[int] = None,
+    dtype: Any = jnp.bfloat16,
+):
+    L = n_layers if n_layers is not None else cfg.n_layers
+    shape = (L, batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dtype),
+        "v": jax.ShapeDtypeStruct(shape, dtype),
+    }
+
+
+def mha_decode(
+    params: Mapping[str, jax.Array],
+    x: jax.Array,                     # (B, 1, d) new token activations
+    layer_k: jax.Array,               # (B, S, Hk, Dh)
+    layer_v: jax.Array,
+    pos: jax.Array,                   # scalar: absolute position of new token
+    cfg: ArchConfig,
+    window: Optional[Any] = None,
+    ring: bool = False,               # sliding-window ring-buffer cache
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step against a contiguous cache. Returns (y, new_k, new_v).
+
+    With ``ring=True`` the cache holds only the last S positions: the write
+    slot is ``pos % S`` and every slot is valid once ``pos >= S-1``.  RoPE is
+    always applied at the *absolute* position (write-time rotation), so
+    reads need no re-rotation.
+    """
+    b = x.shape[0]
+    dh = cfg.head_dim_
+    hk = cfg.n_kv_heads
+    g = cfg.n_heads // hk
+    q, k_new, v_new = _project_qkv(params, x, x, cfg)
+    positions = jnp.full((b, 1), pos)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k_new = apply_rope(k_new, positions, cfg.rope_theta)
+    s = layer_k.shape[1]
+    kpos = jnp.arange(s)
+    if ring:
+        # small local window caches are unsharded: a dynamic slice is cheap
+        slot = jnp.mod(pos, s)
+        layer_k = jax.lax.dynamic_update_slice_in_dim(
+            layer_k, k_new.astype(layer_k.dtype), slot, axis=1
+        )
+        layer_v = jax.lax.dynamic_update_slice_in_dim(
+            layer_v, v_new.astype(layer_v.dtype), slot, axis=1
+        )
+        valid = kpos[None, :] < jnp.minimum(pos + 1, s)
+    else:
+        # mask-write: a dynamic-update-slice at ``pos`` on the SHARDED cache
+        # sequence axis forces GSPMD to replicate the whole cache (§Perf:
+        # 204GB/step of all-gather on deepseek decode); the elementwise
+        # select keeps every shard's slice local.
+        hit = (kpos == pos)[None, :, None, None]
+        layer_k = jnp.where(hit, k_new.astype(layer_k.dtype), layer_k)
+        layer_v = jnp.where(hit, v_new.astype(layer_v.dtype), layer_v)
+        valid = kpos[None, :] <= pos
+        if window is not None:
+            valid &= (pos - kpos[None, :]) < window
+    # grouped GQA: never expand KV heads (see blocked_attention note)
+    qg = q.reshape(b, 1, hk, g, dh)
+    scale = dh ** -0.5
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, layer_k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", probs, layer_v,
+        preferred_element_type=jnp.float32,
+    )
+    out = out.astype(x.dtype).reshape(b, 1, cfg.n_heads * dh)
+    y = jnp.einsum("...f,fd->...d", out, params["wo"])
+    return y, layer_k, layer_v

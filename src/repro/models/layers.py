@@ -1,0 +1,190 @@
+"""Foundational layers + the parameter-spec system.
+
+Parameters are declared as :class:`ParamSpec` trees (shape + logical axes +
+init), from which three things derive mechanically:
+
+* real initialisation (``init_params``) for smoke tests / the train driver,
+* abstract ``ShapeDtypeStruct`` trees (``abstract_params``) for the dry-run
+  (.lower/.compile without ever allocating 67B parameters), and
+* ``PartitionSpec`` trees (``param_shardings``) via the logical-axis rules
+  in ``configs.base`` (train mode = FSDP over "data" + TP over "model";
+  decode mode = TP only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import logical_to_spec
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"     # normal | zeros | ones
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in)
+
+    def fan_in_scale(self) -> float:
+        if self.scale is not None:
+            return self.scale
+        fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[-1]
+        return 1.0 / float(np.sqrt(max(1, fan_in)))
+
+
+ParamTree = Any  # nested dict of ParamSpec / jnp arrays
+
+
+def tree_paths(specs: ParamTree, prefix: str = "") -> Dict[str, ParamSpec]:
+    out: Dict[str, ParamSpec] = {}
+    if isinstance(specs, ParamSpec):
+        out[prefix] = specs
+        return out
+    for k, v in specs.items():
+        out.update(tree_paths(v, f"{prefix}/{k}" if prefix else k))
+    return out
+
+
+def init_params(specs: ParamTree, rng: jax.Array, dtype: Any) -> ParamTree:
+    flat = tree_paths(specs)
+    keys = jax.random.split(rng, max(1, len(flat)))
+    out: Dict[str, jax.Array] = {}
+    for (path, spec), key in zip(sorted(flat.items()), keys):
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dtype)
+        else:
+            arr = (
+                jax.random.normal(key, spec.shape, jnp.float32)
+                * spec.fan_in_scale()
+            ).astype(dtype)
+        out[path] = arr
+    return _unflatten(out)
+
+
+def abstract_params(specs: ParamTree, dtype: Any) -> ParamTree:
+    flat = tree_paths(specs)
+    out = {
+        path: jax.ShapeDtypeStruct(spec.shape, dtype)
+        for path, spec in flat.items()
+    }
+    return _unflatten(out)
+
+
+def param_shardings(
+    specs: ParamTree, rules: Mapping[str, Any], mesh=None
+) -> ParamTree:
+    """PartitionSpec per ParamSpec; with a mesh, mesh-axis components that
+    do not divide the tensor dim are dropped greedily (e.g. xlstm's 1408-wide
+    FFN keeps "model" 16-way FSDP but drops the extra "data" 16-way)."""
+    flat = tree_paths(specs)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else {}
+
+    def fit(spec: ParamSpec):
+        ps = logical_to_spec(spec.logical, rules)
+        if not sizes:
+            return ps
+        fixed = []
+        for dim, axis in zip(spec.shape, ps):
+            if axis is None:
+                fixed.append(None)
+                continue
+            comps = (axis,) if isinstance(axis, str) else tuple(axis)
+            kept = []
+            prod = 1
+            for c in comps:
+                if dim % (prod * sizes.get(c, 1)) == 0:
+                    kept.append(c)
+                    prod *= sizes.get(c, 1)
+            fixed.append(None if not kept else
+                         (kept[0] if len(kept) == 1 else tuple(kept)))
+        from jax.sharding import PartitionSpec as P
+
+        return P(*fixed)
+
+    out = {path: fit(spec) for path, spec in flat.items()}
+    return _unflatten(out)
+
+
+def _unflatten(flat: Dict[str, Any]) -> ParamTree:
+    tree: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# numeric layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float = 1e4
+) -> jax.Array:
+    """x: (..., T, H, Dh); positions: broadcastable to (..., T)."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                       # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,T,Dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]                    # (...,T,1,Dh/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gated_mlp_specs(d_model: int, d_ff: int) -> Dict[str, ParamSpec]:
+    return {
+        "w_gate": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w_up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w_down": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def gated_mlp(params: Mapping[str, jax.Array], x: jax.Array, act: str) -> jax.Array:
+    gate = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    up = jnp.einsum("...d,df->...f", x, params["w_up"])
+    if act == "geglu":
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:  # swiglu
+        h = jax.nn.silu(gate) * up
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def embedding_specs(vocab: int, d_model: int) -> Dict[str, ParamSpec]:
+    return {"table": ParamSpec((vocab, d_model), ("vocab", "embed"), scale=1.0)}
+
+
+def embed_tokens(params: Mapping[str, jax.Array], tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def lm_logits(
+    embed_params: Mapping[str, jax.Array],
+    x: jax.Array,
+    head: Optional[jax.Array] = None,
+) -> jax.Array:
+    table = head if head is not None else embed_params["table"]
+    return jnp.einsum("...d,vd->...v", x, table)

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts FFN with production-style sorted capacity dispatch.
+
+Two implementations sharing one parameter layout (experts sharded over
+"model" = expert parallelism):
+
+* ``sorted`` (default): tokens are routed top-k, flattened, sorted by
+  expert, truncated to a per-expert capacity ``C = ceil(S*k/E * cf)``, and
+  processed as (E, C, d) grouped matmuls — the TPU analogue of
+  megablocks/gmm, expressed with gather/scatter so GSPMD can place the
+  all-to-all.  Dropped tokens (over capacity) contribute zero, standard
+  Switch-style semantics.
+* ``dense``: every expert runs on every token, combined with the routing
+  weights.  E× FLOPs — used only as the correctness oracle in tests.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import ParamSpec
+
+
+def _constrain_experts(x: jax.Array) -> jax.Array:
+    """Pin the leading expert axis of an (E, cap, d) buffer to "model"."""
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, P("model", *([None] * (x.ndim - 1)))
+        )
+    except (ValueError, RuntimeError, NameError):
+        return x  # no mesh context (CPU unit tests)
+
+
+def moe_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", "experts")),
+        "w_gate": ParamSpec((e, d, ff), ("experts", "embed", "mlp")),
+        "w_up": ParamSpec((e, d, ff), ("experts", "embed", "mlp")),
+        "w_down": ParamSpec((e, ff, d), ("experts", "mlp", "embed")),
+    }
+
+
+def _route(params: Mapping[str, jax.Array], x: jax.Array, cfg: ArchConfig):
+    logits = jnp.einsum("sd,de->se", x.astype(jnp.float32), params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)          # (S, k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx, probs
+
+
+def moe_ffn_sorted(
+    params: Mapping[str, jax.Array], x: jax.Array, cfg: ArchConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, d) (or (..., d) — leading dims treated as batch rows).
+
+    Dispatch is **per batch row** (vmapped sort/scatter over B): every
+    routing op then carries the data-sharded batch axis and stays shard-
+    local, while the (B, E, cap, d) expert buffers are sharded (data on B,
+    model on E) — the token->expert movement is the only cross-shard
+    traffic.  (The earlier flat global-token argsort forced GSPMD to
+    all-reduce 1M x d buffers per layer — §Perf hillclimb C.)  Capacity is
+    per row: cap = ceil(T*k/E * cf); overflow drops are Switch-style.
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xr = x.reshape(-1, orig_shape[-2], d) if x.ndim > 2 else x[None]
+    B, T, _ = xr.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(math.ceil(T * k / e * cfg.capacity_factor))
+    cap = max(8, ((cap + 7) // 8) * 8)  # sublane-aligned groups
+
+    gates, idx, probs = _route(params, xr.reshape(-1, d), cfg)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        (jax.nn.one_hot(idx, e, dtype=jnp.float32)).sum(1), axis=0
+    ) / k
+    aux = e * jnp.sum(me * ce)
+    gates = gates.reshape(B, T, k)
+    idx = idx.reshape(B, T, k)
+
+    def dispatch_row(xrow, idx_row, gates_row):
+        """One sequence: sort its T*k assignments into (E, cap, d)."""
+        flat_e = idx_row.reshape(-1)                      # (T*k,)
+        flat_t = jnp.repeat(jnp.arange(T), k)
+        flat_g = gates_row.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+        counts = jnp.bincount(se, length=e)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(T * k) - starts[se]
+        keep = pos < cap
+        slot = jnp.where(keep, se * cap + pos, e * cap)
+        xd = jnp.zeros((e * cap + 1, d), xrow.dtype).at[slot].set(
+            xrow[st] * keep[:, None].astype(xrow.dtype)
+        )
+        return xd[: e * cap].reshape(e, cap, d), (st, sg, keep, slot)
+
+    xe, (st, sg, keep, slot) = jax.vmap(dispatch_row)(xr, idx, gates)
+    # (B, E, cap, d): B data-sharded, E expert(model)-sharded
+    xe = _constrain_experts(xe)
+    h_gate = jnp.einsum("becd,edf->becf", xe, params["w_gate"])
+    h_up = jnp.einsum("becd,edf->becf", xe, params["w_up"])
+    if cfg.ffn_act == "geglu":
+        h = jax.nn.gelu(h_gate, approximate=True) * h_up
+    else:
+        h = jax.nn.silu(h_gate) * h_up
+    ye = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    ye = _constrain_experts(ye)
+
+    def combine_row(ye_row, st_row, sg_row, keep_row, slot_row):
+        y_slots = jnp.concatenate(
+            [ye_row.reshape(e * cap, d), jnp.zeros((1, d), ye_row.dtype)], 0
+        )
+        y_tok = y_slots[slot_row] * (sg_row * keep_row).astype(ye_row.dtype)[:, None]
+        return jnp.zeros((T, d), ye_row.dtype).at[st_row].add(y_tok)
+
+    y = jax.vmap(combine_row)(ye, st, sg, keep, slot)
+    return y.reshape(orig_shape).astype(x.dtype), aux.astype(jnp.float32)
+
+
+def moe_ffn_dense(
+    params: Mapping[str, jax.Array], x: jax.Array, cfg: ArchConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Oracle path: compute all experts for all tokens (E x FLOPs)."""
+    orig_shape = x.shape
+    xf = x.reshape(-1, orig_shape[-1])
+    s = xf.shape[0]
+    e = cfg.n_experts
+    gates, idx, probs = _route(params, xf, cfg)
+    combine = jnp.zeros((s, e), jnp.float32)
+    for j in range(cfg.top_k):  # static small k
+        combine = combine + jax.nn.one_hot(idx[:, j], e) * gates[:, j:j + 1]
+    h_gate = jnp.einsum("sd,edf->esf", xf, params["w_gate"])
+    h_up = jnp.einsum("sd,edf->esf", xf, params["w_up"])
+    if cfg.ffn_act == "geglu":
+        h = jax.nn.gelu(h_gate, approximate=True) * h_up
+    else:
+        h = jax.nn.silu(h_gate) * h_up
+    ye = jnp.einsum("esf,efd->esd", h, params["w_down"])
+    y = jnp.einsum("esd,se->sd", ye.astype(jnp.float32), combine)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx, e, dtype=jnp.float32).sum(1), axis=0) / cfg.top_k
+    aux = e * jnp.sum(me * ce)
+    return y.reshape(orig_shape).astype(x.dtype), aux.astype(jnp.float32)
+
+
+def moe_ffn(params, x, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    if cfg.moe_impl == "dense":
+        return moe_ffn_dense(params, x, cfg)
+    return moe_ffn_sorted(params, x, cfg)

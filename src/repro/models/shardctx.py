@@ -1,0 +1,46 @@
+"""Activation-sharding context: pin the batch axis through the layer stack.
+
+With FSDP weights sharded over ("model","data") on their output dims, GSPMD
+has two legal plans for每 layer matmul: (a) all-gather the small weight over
+"data" and keep activations batch-sharded, or (b) gather the huge activation
+batch and keep the weight sharded.  Left alone it picked (b) on the 95-layer
+dense cell (§Perf hillclimb B: 17TB/step of activation all-gathers).
+Constraining every block boundary to batch-sharded activations forces (a).
+
+The launcher (dryrun/train) sets the batch mesh axes before tracing; model
+code calls :func:`constrain_batch` at block boundaries.  No-op when unset
+(tests, single-device runs).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+_BATCH_AXES: Optional[Tuple[str, ...]] = None
+
+
+def set_batch_axes(axes) -> None:
+    """axes: mesh axis name(s) carrying the batch dim, or None to disable."""
+    global _BATCH_AXES
+    if axes is None:
+        _BATCH_AXES = None
+    elif isinstance(axes, str):
+        _BATCH_AXES = (axes,)
+    else:
+        _BATCH_AXES = tuple(axes)
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Constrain a (batch, ...) activation to batch-sharded, rest replicated
+    at this point (GSPMD still refines the trailing dims)."""
+    if _BATCH_AXES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(_BATCH_AXES, *([None] * (x.ndim - 1)))
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x  # no mesh context (plain CPU tests)

@@ -1,0 +1,186 @@
+"""Mamba2 (SSD) blocks — chunked parallel scan, TPU-idiomatic.
+
+The CUDA selective-scan has no TPU analogue; the TPU-native formulation is
+the *chunked* SSD decomposition (Dao & Gu 2024): split time into chunks of
+Q steps, compute intra-chunk interactions as dense matmuls (MXU-friendly),
+and carry the inter-chunk SSM state with a short ``lax.scan``.  The Pallas
+kernel in ``repro.kernels.mamba2_scan`` tiles exactly this structure; this
+module is the jnp reference + the layer plumbing (projections, conv, gate).
+
+State convention: h has shape (B, H, dh, N) with N = ssm_state; scalar
+per-head decay a_t = exp(dt_t * A) (A < 0), input B_t/C_t shared across
+heads (ngroups=1, as in Mamba2 / Zamba2).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import ParamSpec
+
+
+def mamba2_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    return {
+        # z (gate), x, B, C, dt  in one fused projection
+        "in_proj": ParamSpec((d, 2 * di + 2 * n + nh), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.ssm_conv, di + 2 * n), ("conv", "mlp"), scale=0.5),
+        "A_log": ParamSpec((nh,), ("state",), init="zeros"),
+        "D": ParamSpec((nh,), ("state",), init="ones"),
+        "dt_bias": ParamSpec((nh,), ("state",), init="zeros"),
+        "norm_w": ParamSpec((di,), ("mlp",), init="zeros"),
+        "out_proj": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(proj: jax.Array, cfg: ArchConfig):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    z, xs, b, c, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1
+    )
+    return z, xs, b, c, dt, di, n, nh
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, T, C); w: (K, C) depthwise causal conv."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # tiny static K (4)
+        out = out + xp[:, i: i + x.shape[1], :] * w[i]
+    return out
+
+
+def ssd_chunked(
+    xh: jax.Array,    # (B, T, H, P)   inputs per head
+    a: jax.Array,     # (B, T, H)      per-step decay in (0,1)
+    b: jax.Array,     # (B, T, N)      input projection (shared groups)
+    c: jax.Array,     # (B, T, N)      output projection
+    chunk: int = 256,
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD: y_t = C_t . h_t ;  h_t = a_t h_{t-1} + B_t x_t^T.
+
+    Returns (y, h_final) with y: (B,T,H,P), h: (B,H,P,N).
+    """
+    B, T, H, P = xh.shape
+    N = b.shape[-1]
+    nc = max(1, (T + chunk - 1) // chunk)
+    pad = nc * chunk - T
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    Tp = nc * chunk
+    f32 = jnp.float32
+    xh_ = xh.reshape(B, nc, chunk, H, P).astype(f32)
+    a_ = a.reshape(B, nc, chunk, H).astype(f32)
+    b_ = b.reshape(B, nc, chunk, N).astype(f32)
+    c_ = c.reshape(B, nc, chunk, N).astype(f32)
+
+    loga = jnp.log(jnp.clip(a_, 1e-20))
+    cum = jnp.cumsum(loga, axis=2)                      # (B,nc,Q,H)
+    total = cum[:, :, -1:, :]                           # chunk decay
+    # intra-chunk: L[q, s] = exp(cum_q - cum_s) for q >= s  (per head)
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    cb = jnp.einsum("bnqk,bnsk->bnqs", c_, b_)          # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bnqs,bnqsh,bnshp->bnqhp", cb, L, xh_)
+
+    # chunk-local states to carry: sum_s B_s x_s^T * decay(s->end)
+    decay_to_end = jnp.exp(total - cum)                 # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bnsk,bnsh,bnshp->bnhpk", b_, decay_to_end, xh_)
+    chunk_decay = jnp.exp(total[:, :, 0, :])            # (B,nc,H)
+
+    def carry_fn(h, inp):
+        cs, cd = inp                                    # (B,H,P,N), (B,H)
+        h_in = h
+        h = h * cd[:, :, None, None] + cs
+        return h, h_in
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), f32)
+    cs_t = jnp.moveaxis(chunk_state, 1, 0)              # (nc,B,H,P,N)
+    cd_t = jnp.moveaxis(chunk_decay, 1, 0)              # (nc,B,H)
+    h_final, h_prevs = jax.lax.scan(carry_fn, h0, (cs_t, cd_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)               # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y += (C_q . h_prev) * decay(0->q)
+    decay_from_start = jnp.exp(cum)                     # (B,nc,Q,H)
+    y_inter = jnp.einsum(
+        "bnqk,bnhpk,bnqh->bnqhp", c_, h_prevs, decay_from_start
+    )
+    y = (y_intra + y_inter).reshape(B, Tp, H, P)[:, :T]
+    return y.astype(xh.dtype), h_final
+
+
+def mamba2_block(
+    params: Mapping[str, jax.Array],
+    x: jax.Array,                       # (B, T, d)
+    cfg: ArchConfig,
+) -> jax.Array:
+    proj = jnp.einsum("btd,de->bte", x, params["in_proj"])
+    z, xs, b, c, dt, di, n, nh = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"]))
+    xs, b, c = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])        # (B,T,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))   # (H,) negative
+    a = jnp.exp(dt * A)                                 # per-step decay
+    xh = xs.reshape(*xs.shape[:-1], nh, cfg.ssm_head_dim)
+    xh = xh * dt[..., None]                             # dt-scaled input
+    y, _ = ssd_chunked(xh, a, b, c)
+    y = y + xh * params["D"][:, None]
+    y = y.reshape(*x.shape[:-1], di)
+    # gated RMSNorm (Mamba2)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.norm_eps) * (1.0 + params["norm_w"])
+    return jnp.einsum("bte,ed->btd", yf.astype(x.dtype), params["out_proj"])
+
+
+def mamba2_decode_step(
+    params: Mapping[str, jax.Array],
+    x: jax.Array,                       # (B, 1, d)
+    state: jax.Array,                   # (B, H, P, N)
+    conv_state: jax.Array,              # (B, K-1, di+2N)
+    cfg: ArchConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token recurrent step: O(1) in context length."""
+    proj = jnp.einsum("btd,de->bte", x, params["in_proj"])
+    z, xs, b, c, dt, di, n, nh = _split_proj(proj, cfg)
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)      # (B,1,C)
+    window = jnp.concatenate([conv_state, conv_in], axis=1)  # (B,K,C)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, params["conv_w"])
+    )[:, None, :]
+    new_conv_state = window[:, 1:]
+    xs, b, c = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                 # (B,1,H)
+    xh = (xs.reshape(*xs.shape[:-1], nh, cfg.ssm_head_dim) * dt[..., None])
+    # h = a h + B x^T ; y = C . h
+    h = state * a[:, 0, :, None, None] + jnp.einsum(
+        "bk,bhp->bhpk", b[:, 0].astype(jnp.float32), xh[:, 0].astype(jnp.float32)
+    )
+    y = jnp.einsum("bk,bhpk->bhp", c[:, 0].astype(jnp.float32), h)
+    y = y[:, None] + xh * params["D"][:, None]
+    y = y.reshape(*x.shape[:-1], di)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.norm_eps) * (1.0 + params["norm_w"])
+    out = jnp.einsum("bte,ed->btd", yf.astype(x.dtype), params["out_proj"])
+    return out, h, new_conv_state

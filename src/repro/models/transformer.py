@@ -1,0 +1,731 @@
+"""Model assembly: every assigned architecture as one composable definition.
+
+Families and their layer-stack structure (all scan-over-layers so HLO size is
+O(1) in depth — deepseek's 95 layers compile as one scanned block):
+
+* ``dense | moe | vlm``  — decoder-only LM; plain ``lax.scan`` over L blocks.
+  gemma3's 5:1 local:global pattern becomes a two-level scan: outer over
+  L/6 groups, inner = 5 sliding-window layers (stacked) + 1 global layer.
+* ``audio`` (seamless)    — encoder-decoder: bidirectional encoder scan +
+  causal decoder scan with cross-attention; modality frontend is a stub
+  (precomputed frame embeddings arrive as inputs, per the assignment).
+* ``hybrid`` (zamba2)     — scan over Mamba2 blocks; ONE shared attention+MLP
+  block (zamba's parameter-sharing trick) applied every ``attn_every``
+  layers via ``lax.cond`` on the layer index, reading concat([h, emb]).
+* ``ssm`` (xlstm)         — groups of 7 chunked mLSTM blocks + 1 sequential
+  sLSTM block (xLSTM[7:1]).
+
+Each family exposes: ``param_specs``, ``train_loss``, ``prefill_logits``,
+``serve_step`` (+ cache specs) through :func:`build_model`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import attention as A
+from . import moe as M
+from . import ssm as S
+from . import xlstm as X
+from .shardctx import constrain_batch
+from .layers import (
+    ParamSpec,
+    embed_tokens,
+    embedding_specs,
+    gated_mlp,
+    gated_mlp_specs,
+    rms_norm,
+)
+
+
+def _stack_specs(specs: Any, n: int) -> Any:
+    """Prepend a layer dimension to every ParamSpec in a tree."""
+    if isinstance(specs, ParamSpec):
+        return ParamSpec(
+            (n,) + specs.shape, ("layers",) + specs.logical, specs.init, specs.scale
+        )
+    return {k: _stack_specs(v, n) for k, v in specs.items()}
+
+
+def _remat(fn: Callable, mode: str) -> Callable:
+    if mode == "full":
+        return jax.checkpoint(fn)
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        )
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# decoder-only transformer (dense / moe / vlm backbone)
+# ---------------------------------------------------------------------------
+
+def _block_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "ln_attn": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "attn": A.attn_specs(cfg),
+        "ln_ffn": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+    if cfg.moe:
+        specs["moe"] = M.moe_specs(cfg)
+    else:
+        specs["mlp"] = gated_mlp_specs(cfg.d_model, cfg.d_ff)
+    return specs
+
+
+def _block_apply(
+    params: Mapping[str, Any],
+    x: jax.Array,
+    cfg: ArchConfig,
+    window: Optional[Any],
+) -> Tuple[jax.Array, jax.Array]:
+    x = constrain_batch(x)
+    h = rms_norm(x, params["ln_attn"], cfg.norm_eps)
+    x = x + A.mha_train(params["attn"], h, cfg, window=window)
+    x = constrain_batch(x)
+    h = rms_norm(x, params["ln_ffn"], cfg.norm_eps)
+    if cfg.moe:
+        y, aux = M.moe_ffn(params["moe"], h, cfg)
+    else:
+        y, aux = gated_mlp(params["mlp"], h, cfg.ffn_act), jnp.zeros((), jnp.float32)
+    return constrain_batch(x + y), aux
+
+
+def _block_decode(
+    params: Mapping[str, Any],
+    x: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    pos: jax.Array,
+    cfg: ArchConfig,
+    window: Optional[Any],
+    ring: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    h = rms_norm(x, params["ln_attn"], cfg.norm_eps)
+    y, k, v = A.mha_decode(params["attn"], h, k, v, pos, cfg, window=window,
+                           ring=ring)
+    x = x + y
+    h = rms_norm(x, params["ln_ffn"], cfg.norm_eps)
+    if cfg.moe:
+        y, _ = M.moe_ffn(params["moe"], h, cfg)
+    else:
+        y = gated_mlp(params["mlp"], h, cfg.ffn_act)
+    return x + y, k, v
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    param_specs: Any
+    train_loss: Callable          # (params, batch) -> (loss, metrics)
+    prefill_logits: Callable      # (params, batch) -> logits
+    serve_step: Callable          # (params, cache, batch) -> (logits, cache)
+    cache_specs: Callable         # (batch, seq) -> tree of ShapeDtypeStruct
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "audio" or cfg.is_encdec:
+        return _build_encdec(cfg)
+    if cfg.family == "hybrid":
+        return _build_hybrid(cfg)
+    if cfg.family == "ssm":
+        return _build_xlstm(cfg)
+    return _build_lm(cfg)
+
+
+# ------------------------------------------------------------------ LM ----
+
+def _lm_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    specs: Dict[str, Any] = {
+        "embed": embedding_specs(cfg.padded_vocab, cfg.d_model),
+        "ln_f": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+    ratio = cfg.local_global_ratio
+    if ratio > 0:
+        period = ratio + 1
+        n_groups = cfg.n_layers // period
+        specs["local"] = _stack_specs(_stack_specs(_block_specs(cfg), ratio), n_groups)
+        specs["global"] = _stack_specs(_block_specs(cfg), n_groups)
+    else:
+        specs["layers"] = _stack_specs(_block_specs(cfg), cfg.n_layers)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec(
+            (cfg.padded_vocab, cfg.d_model), ("vocab", "embed"), scale=1.0
+        )
+    return specs
+
+
+def _lm_embed_inputs(params, batch, cfg: ArchConfig) -> jax.Array:
+    x = embed_tokens(params["embed"], batch["tokens"])
+    if cfg.frontend == "vision":
+        # stub frontend: precomputed patch embeddings prepended to the text
+        x = jnp.concatenate([batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # gemma embed scaling
+    return x
+
+
+def _lm_backbone(params, x, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    ratio = cfg.local_global_ratio
+
+    if ratio > 0:
+        def group(carry, gp):
+            x, aux = carry
+
+            local_fn = _remat(
+                lambda lp, xx: _block_apply(lp, xx, cfg, cfg.sliding_window),
+                cfg.remat,
+            )
+            global_fn = _remat(
+                lambda lp, xx: _block_apply(lp, xx, cfg, None), cfg.remat
+            )
+
+            def local_layer(c, lp):
+                xx, au = c
+                xx, a = local_fn(lp, xx)
+                return (xx, au + a), None
+
+            (x, aux), _ = jax.lax.scan(local_layer, (x, aux), gp["local"])
+            x, a = global_fn(gp["global"], x)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(
+            group, (x, jnp.zeros((), jnp.float32)),
+            {"local": params["local"], "global": params["global"]},
+        )
+    else:
+        layer_fn = _remat(
+            lambda lp, xx: _block_apply(lp, xx, cfg, cfg.sliding_window),
+            cfg.remat,
+        )
+
+        def layer(carry, lp):
+            x, aux = carry
+            x, a = layer_fn(lp, x)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(
+            layer, (x, jnp.zeros((), jnp.float32)), params["layers"]
+        )
+    return rms_norm(x, params["ln_f"], cfg.norm_eps), aux
+
+
+def _lm_logits(params, x, cfg: ArchConfig) -> jax.Array:
+    head = params.get("lm_head", params["embed"]["table"])
+    return jnp.einsum("...d,vd->...v", x, head)
+
+
+def _xent(logits: jax.Array, labels: jax.Array, mask: jax.Array) -> jax.Array:
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def _build_lm(cfg: ArchConfig) -> Model:
+    specs = _lm_specs(cfg)
+
+    def train_loss(params, batch):
+        x = _lm_embed_inputs(params, batch, cfg)
+        x, aux = _lm_backbone(params, x, cfg)
+        logits = _lm_logits(params, x, cfg)
+        tokens = batch["tokens"]
+        pre = x.shape[1] - tokens.shape[1]     # frontend positions carry no loss
+        logits_txt = logits[:, pre:]
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.pad(
+            jnp.ones_like(tokens[:, 1:], jnp.float32), ((0, 0), (0, 1))
+        )
+        loss = _xent(logits_txt, labels, mask) + 0.01 * aux
+        return loss, {"loss": loss, "aux": aux}
+
+    def prefill_logits(params, batch):
+        x = _lm_embed_inputs(params, batch, cfg)
+        x, _ = _lm_backbone(params, x, cfg)
+        return _lm_logits(params, x[:, -1:], cfg)
+
+    ratio = cfg.local_global_ratio
+
+    def cache_specs(batch: int, seq: int):
+        if ratio > 0:
+            period = ratio + 1
+            g = cfg.n_layers // period
+            w = min(cfg.sliding_window or seq, seq)
+            return {
+                "local": A.kv_cache_specs(cfg, batch, w, n_layers=g * ratio),
+                "global": A.kv_cache_specs(cfg, batch, seq, n_layers=g),
+            }
+        return A.kv_cache_specs(cfg, batch, seq)
+
+    def serve_step(params, cache, batch):
+        tok, pos = batch["token"], batch["pos"]
+        x = embed_tokens(params["embed"], tok)
+        if cfg.name.startswith("gemma"):
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)  # gemma scaling
+        if ratio > 0:
+            period = ratio + 1
+            g = cfg.n_layers // period
+            lk = cache["local"]["k"].reshape(g, ratio, *cache["local"]["k"].shape[1:])
+            lv = cache["local"]["v"].reshape(g, ratio, *cache["local"]["v"].shape[1:])
+
+            # Ring-buffer local caches: write slot pos % window, RoPE applied
+            # at the absolute position (see mha_decode ring semantics).
+            def group(x, gp):
+                lparams, gk, gv, gparams, pk, pv = gp
+
+                def local_layer(xx, lp):
+                    p, k, v = lp
+                    xx, k, v = _block_decode(p, xx, k, v, pos, cfg, None,
+                                             ring=True)
+                    return xx, (k, v)
+
+                x, (gk, gv) = jax.lax.scan(local_layer, x, (lparams, gk, gv))
+                x, pk, pv = _block_decode(gparams, x, pk, pv, pos, cfg, None)
+                return x, (gk, gv, pk, pv)
+
+            x, (lk2, lv2, gk2, gv2) = jax.lax.scan(
+                group, x,
+                (params["local"], lk, lv, params["global"],
+                 cache["global"]["k"], cache["global"]["v"]),
+            )
+            new_cache = {
+                "local": {
+                    "k": lk2.reshape(g * ratio, *lk2.shape[2:]),
+                    "v": lv2.reshape(g * ratio, *lv2.shape[2:]),
+                },
+                "global": {"k": gk2, "v": gv2},
+            }
+        else:
+            def layer(x, lp):
+                p, k, v = lp
+                x, k, v = _block_decode(p, x, k, v, pos, cfg, cfg.sliding_window)
+                return x, (k, v)
+
+            x, (ks, vs) = jax.lax.scan(
+                layer, x, (params["layers"], cache["k"], cache["v"])
+            )
+            new_cache = {"k": ks, "v": vs}
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return _lm_logits(params, x, cfg), new_cache
+
+    return Model(cfg, specs, train_loss, prefill_logits, serve_step, cache_specs)
+
+
+# ------------------------------------------------------- encoder-decoder ---
+
+def _build_encdec(cfg: ArchConfig) -> Model:
+    enc_block = {
+        "ln_attn": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "attn": A.attn_specs(cfg),
+        "ln_ffn": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "mlp": gated_mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+    dec_block = dict(enc_block)
+    dec_block = {
+        **enc_block,
+        "ln_cross": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "cross": A.attn_specs(cfg),
+    }
+    specs = {
+        "embed": embedding_specs(cfg.padded_vocab, cfg.d_model),
+        "encoder": _stack_specs(enc_block, cfg.encoder_layers),
+        "decoder": _stack_specs(dec_block, cfg.n_layers),
+        "ln_enc": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "ln_f": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+
+    def encode(params, src):
+        def layer(x, lp):
+            x = constrain_batch(x)
+            h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+            x = x + A.mha_train(lp["attn"], h, cfg, causal=False)
+            h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+            return constrain_batch(x + gated_mlp(lp["mlp"], h, cfg.ffn_act)), None
+
+        layer_fn = _remat(layer, cfg.remat)
+        x, _ = jax.lax.scan(lambda c, lp: layer_fn(c, lp), src, params["encoder"])
+        return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+    def dec_layer_train(x, lp, enc):
+        x = constrain_batch(x)
+        h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        x = x + A.mha_train(lp["attn"], h, cfg, causal=True)
+        h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        x = x + A.mha_train(lp["cross"], h, cfg, kv_src=enc, causal=False)
+        h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+        return constrain_batch(x + gated_mlp(lp["mlp"], h, cfg.ffn_act))
+
+    def decode_train(params, tgt_x, enc):
+        dec_fn = _remat(lambda x, lp: dec_layer_train(x, lp, enc), cfg.remat)
+
+        def layer(x, lp):
+            return dec_fn(x, lp), None
+
+        x, _ = jax.lax.scan(layer, tgt_x, params["decoder"])
+        return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+    def train_loss(params, batch):
+        enc = encode(params, batch["src_embeds"].astype(params["embed"]["table"].dtype))
+        tgt = batch["tgt_tokens"]
+        x = embed_tokens(params["embed"], tgt)
+        x = decode_train(params, x, enc)
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"]["table"])
+        labels = jnp.pad(tgt[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.pad(jnp.ones_like(tgt[:, 1:], jnp.float32), ((0, 0), (0, 1)))
+        loss = _xent(logits, labels, mask)
+        return loss, {"loss": loss}
+
+    def prefill_logits(params, batch):
+        enc = encode(params, batch["src_embeds"].astype(params["embed"]["table"].dtype))
+        x = embed_tokens(params["embed"], batch["tgt_tokens"])
+        x = decode_train(params, x, enc)
+        return jnp.einsum("...d,vd->...v", x[:, -1:], params["embed"]["table"])
+
+    def cache_specs(batch: int, seq: int):
+        src = 4096  # encoder frames for serving (stub frontend length)
+        return {
+            "self": A.kv_cache_specs(cfg, batch, seq),
+            "cross": A.kv_cache_specs(cfg, batch, src),
+            "enc_done": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+    def serve_step(params, cache, batch):
+        tok, pos = batch["token"], batch["pos"]
+        x = embed_tokens(params["embed"], tok)
+
+        def layer(x, lp):
+            p, k, v, ck, cv = lp
+            x, k, v = _block_decode_encdec(p, x, k, v, ck, cv, pos, cfg)
+            return x, (k, v)
+
+        x, (ks, vs) = jax.lax.scan(
+            layer,
+            x,
+            (params["decoder"], cache["self"]["k"], cache["self"]["v"],
+             cache["cross"]["k"], cache["cross"]["v"]),
+        )
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"]["table"])
+        new_cache = {
+            "self": {"k": ks, "v": vs},
+            "cross": cache["cross"],
+            "enc_done": cache["enc_done"],
+        }
+        return logits, new_cache
+
+    return Model(cfg, specs, train_loss, prefill_logits, serve_step, cache_specs)
+
+
+def _block_decode_encdec(p, x, k, v, ck, cv, pos, cfg: ArchConfig):
+    h = rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    y, k, v = A.mha_decode(p["attn"], h, k, v, pos, cfg)
+    x = x + y
+    # cross-attention against the precomputed encoder KV (no cache update)
+    h = rms_norm(x, p["ln_cross"], cfg.norm_eps)
+    b = x.shape[0]
+    dh = cfg.head_dim_
+    q = jnp.einsum("...d,df->...f", h, p["cross"]["wq"])
+    q = q.reshape(b, 1, cfg.n_heads, dh)
+    kf = A._expand_kv(ck, cfg.n_heads)
+    vf = A._expand_kv(cv, cfg.n_heads)
+    scores = jnp.einsum(
+        "bqhd,bshd->bhqs", q.astype(jnp.float32), kf.astype(jnp.float32)
+    ) * dh ** -0.5
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, vf.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, 1, cfg.n_heads * dh)
+    x = x + jnp.einsum("...f,fd->...d", out, p["cross"]["wo"])
+    h = rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+    return x + gated_mlp(p["mlp"], h, cfg.ffn_act), k, v
+
+
+# ----------------------------------------------------------- hybrid (zamba)
+
+def _shared_attn_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    """Zamba2 shared block: attention over concat([h, emb]) (2d) -> d."""
+    d2 = 2 * cfg.d_model
+    dh = d2 // cfg.n_heads
+    return {
+        "ln": ParamSpec((d2,), ("embed",), init="zeros"),
+        "wq": ParamSpec((d2, cfg.n_heads * dh), ("embed", "q_dim")),
+        "wk": ParamSpec((d2, cfg.n_kv_heads * dh), ("embed", "q_dim")),
+        "wv": ParamSpec((d2, cfg.n_kv_heads * dh), ("embed", "q_dim")),
+        "wo": ParamSpec((cfg.n_heads * dh, cfg.d_model), ("q_dim", "embed")),
+        "ln_ffn": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "mlp": gated_mlp_specs(cfg.d_model, cfg.d_ff),
+    }
+
+
+def _shared_attn_apply(p, x, emb, cfg: ArchConfig, kv=None, pos=None):
+    """Train path (kv=None) or decode path (kv=(k, v) cache slices)."""
+    d2 = 2 * cfg.d_model
+    dh = d2 // cfg.n_heads
+    hk = cfg.n_kv_heads
+    cat = jnp.concatenate([x, emb], axis=-1)
+    h = rms_norm(cat, p["ln"], cfg.norm_eps)
+    b, t, _ = h.shape
+    q = jnp.einsum("...d,df->...f", h, p["wq"]).reshape(b, t, cfg.n_heads, dh)
+    k = jnp.einsum("...d,df->...f", h, p["wk"]).reshape(b, t, hk, dh)
+    v = jnp.einsum("...d,df->...f", h, p["wv"]).reshape(b, t, hk, dh)
+    if kv is None:
+        positions = jnp.arange(t)[None, :]
+        q = A.apply_rope(q, positions, cfg.rope_theta)
+        k = A.apply_rope(k, positions, cfg.rope_theta)
+        out = A.blocked_attention(
+            q,
+            A._expand_kv(k, cfg.n_heads),
+            A._expand_kv(v, cfg.n_heads),
+            causal=True,
+        )
+        new_kv = None
+    else:
+        ck, cv = kv
+        positions = jnp.full((b, 1), pos)
+        q = A.apply_rope(q, positions, cfg.rope_theta)
+        k = A.apply_rope(k, positions, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), pos, axis=1)
+        kf = A._expand_kv(ck, cfg.n_heads)
+        vf = A._expand_kv(cv, cfg.n_heads)
+        s = kf.shape[1]
+        scores = jnp.einsum(
+            "bqhd,bshd->bhqs", q.astype(jnp.float32), kf.astype(jnp.float32)
+        ) * dh ** -0.5
+        valid = jnp.arange(s)[None, :] <= pos
+        scores = jnp.where(valid[:, None, None, :], scores, A.NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqs,bshd->bqhd", probs, vf.astype(jnp.float32))
+        out = out.astype(x.dtype)
+        new_kv = (ck, cv)
+    out = out.reshape(b, t, cfg.n_heads * dh)
+    x = x + jnp.einsum("...f,fd->...d", out, p["wo"])
+    hh = rms_norm(x, p["ln_ffn"], cfg.norm_eps)
+    return x + gated_mlp(p["mlp"], hh, cfg.ffn_act), new_kv
+
+
+def _build_hybrid(cfg: ArchConfig) -> Model:
+    specs = {
+        "embed": embedding_specs(cfg.padded_vocab, cfg.d_model),
+        "mamba": _stack_specs(S.mamba2_specs(cfg), cfg.n_layers),
+        "shared_attn": _shared_attn_specs(cfg),
+        "ln_f": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+    every = max(1, cfg.attn_every)
+
+    def backbone_train(params, x):
+        emb = x
+
+        def layer(carry, lp):
+            x, idx = carry
+            p, use_attn = lp
+            x = constrain_batch(x + S.mamba2_block(p, x, cfg))
+
+            def with_attn(x):
+                y, _ = _shared_attn_apply(params["shared_attn"], x, emb, cfg)
+                return y
+
+            x = jax.lax.cond(use_attn, with_attn, lambda x: x, x)
+            return (x, idx + 1), None
+
+        flags = (jnp.arange(cfg.n_layers) % every) == (every - 1)
+        layer_fn = _remat(layer, cfg.remat)
+        (x, _), _ = jax.lax.scan(
+            lambda c, lp: layer_fn(c, lp),
+            (x, jnp.zeros((), jnp.int32)),
+            (params["mamba"], flags),
+        )
+        return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+    def train_loss(params, batch):
+        tokens = batch["tokens"]
+        x = embed_tokens(params["embed"], tokens)
+        x = backbone_train(params, x)
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"]["table"])
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.pad(jnp.ones_like(tokens[:, 1:], jnp.float32), ((0, 0), (0, 1)))
+        loss = _xent(logits, labels, mask)
+        return loss, {"loss": loss}
+
+    def prefill_logits(params, batch):
+        x = embed_tokens(params["embed"], batch["tokens"])
+        x = backbone_train(params, x)
+        return jnp.einsum("...d,vd->...v", x[:, -1:], params["embed"]["table"])
+
+    n_uses = cfg.n_layers // every
+    di = cfg.ssm_expand * cfg.d_model
+    nh = di // cfg.ssm_head_dim
+    d2h = 2 * cfg.d_model // cfg.n_heads
+
+    def cache_specs(batch: int, seq: int):
+        return {
+            "mamba_h": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32,
+            ),
+            "mamba_conv": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, cfg.ssm_conv - 1, di + 2 * cfg.ssm_state),
+                jnp.bfloat16,
+            ),
+            "attn_k": jax.ShapeDtypeStruct(
+                (n_uses, batch, seq, cfg.n_kv_heads, d2h), jnp.bfloat16
+            ),
+            "attn_v": jax.ShapeDtypeStruct(
+                (n_uses, batch, seq, cfg.n_kv_heads, d2h), jnp.bfloat16
+            ),
+        }
+
+    def serve_step(params, cache, batch):
+        tok, pos = batch["token"], batch["pos"]
+        x = embed_tokens(params["embed"], tok)
+        emb = x
+        # mamba layers scanned; shared attn applied at the cadence points by
+        # unrolling over the (few) attention uses — cache group per use.
+        mh, mc = cache["mamba_h"], cache["mamba_conv"]
+        ak, av = cache["attn_k"], cache["attn_v"]
+        mh_l = mh.reshape(n_uses, every, *mh.shape[1:])
+        mc_l = mc.reshape(n_uses, every, *mc.shape[1:])
+
+        def use_group(x, gp):
+            mparams, h_g, c_g, k_g, v_g = gp
+
+            def mlayer(x, lp):
+                p, h, c = lp
+                y, h, c = S.mamba2_decode_step(p, x, h, c, cfg)
+                return x + y, (h, c)
+
+            x, (h_g, c_g) = jax.lax.scan(mlayer, x, (mparams, h_g, c_g))
+            x, (k_g, v_g) = _shared_attn_apply(
+                params["shared_attn"], x, emb, cfg, kv=(k_g, v_g), pos=pos
+            )
+            return x, (h_g, c_g, k_g, v_g)
+
+        mp = jax.tree.map(
+            lambda a: a.reshape(n_uses, every, *a.shape[1:]), params["mamba"]
+        )
+        x, (h2, c2, k2, v2) = jax.lax.scan(use_group, x, (mp, mh_l, mc_l, ak, av))
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"]["table"])
+        new_cache = {
+            "mamba_h": h2.reshape(cfg.n_layers, *h2.shape[2:]),
+            "mamba_conv": c2.reshape(cfg.n_layers, *c2.shape[2:]),
+            "attn_k": k2,
+            "attn_v": v2,
+        }
+        return logits, new_cache
+
+    return Model(cfg, specs, train_loss, prefill_logits, serve_step, cache_specs)
+
+
+# ------------------------------------------------------------- xLSTM -------
+
+def _build_xlstm(cfg: ArchConfig) -> Model:
+    period = max(2, cfg.xlstm_slstm_every)          # e.g. 8 => 7 mLSTM + 1 sLSTM
+    n_groups = cfg.n_layers // period
+    n_m = period - 1
+    m_block = {
+        "ln": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "m": X.mlstm_specs(cfg),
+    }
+    s_block = {
+        "ln": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+        "s": X.slstm_specs(cfg),
+    }
+    specs = {
+        "embed": embedding_specs(cfg.padded_vocab, cfg.d_model),
+        "mlstm": _stack_specs(_stack_specs(m_block, n_m), n_groups),
+        "slstm": _stack_specs(s_block, n_groups),
+        "ln_f": ParamSpec((cfg.d_model,), ("embed",), init="zeros"),
+    }
+
+    def backbone_train(params, x):
+        def group(x, gp):
+            def mlayer(x, lp):
+                x = constrain_batch(x)
+                h = rms_norm(x, lp["ln"], cfg.norm_eps)
+                return x + X.mlstm_block(lp["m"], h, cfg), None
+
+            mfn = _remat(mlayer, cfg.remat)
+            x, _ = jax.lax.scan(lambda c, lp: mfn(c, lp), x, gp["mlstm"])
+            h = rms_norm(x, gp["slstm"]["ln"], cfg.norm_eps)
+            x = x + X.slstm_block(gp["slstm"]["s"], h, cfg)
+            return x, None
+
+        x, _ = jax.lax.scan(
+            group, x, {"mlstm": params["mlstm"], "slstm": params["slstm"]}
+        )
+        return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+    def train_loss(params, batch):
+        tokens = batch["tokens"]
+        x = embed_tokens(params["embed"], tokens)
+        x = backbone_train(params, x)
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"]["table"])
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.pad(jnp.ones_like(tokens[:, 1:], jnp.float32), ((0, 0), (0, 1)))
+        loss = _xent(logits, labels, mask)
+        return loss, {"loss": loss}
+
+    def prefill_logits(params, batch):
+        x = embed_tokens(params["embed"], batch["tokens"])
+        x = backbone_train(params, x)
+        return jnp.einsum("...d,vd->...v", x[:, -1:], params["embed"]["table"])
+
+    di = 2 * cfg.d_model
+    K = di // cfg.n_heads
+    dh = cfg.d_model // cfg.n_heads
+
+    def cache_specs(batch: int, seq: int):
+        del seq  # recurrent state: O(1) in context length (the point of xLSTM)
+        f32 = jnp.float32
+        return {
+            "mC": jax.ShapeDtypeStruct((n_groups, n_m, batch, cfg.n_heads, K, K), f32),
+            "mN": jax.ShapeDtypeStruct((n_groups, n_m, batch, cfg.n_heads, K), f32),
+            "sc": jax.ShapeDtypeStruct((n_groups, batch, cfg.n_heads, dh), f32),
+            "sn": jax.ShapeDtypeStruct((n_groups, batch, cfg.n_heads, dh), f32),
+            "sh": jax.ShapeDtypeStruct((n_groups, batch, cfg.n_heads, dh), f32),
+            "sm": jax.ShapeDtypeStruct((n_groups, batch, cfg.n_heads, dh), f32),
+        }
+
+    def serve_step(params, cache, batch):
+        tok = batch["token"]
+        x = embed_tokens(params["embed"], tok)
+
+        def group(x, gp):
+            mparams, sparams, mC, mN, sc, sn, sh, sm = gp
+
+            def mlayer(x, lp):
+                p, C, n = lp
+                h = rms_norm(x, p["ln"], cfg.norm_eps)
+                y, C, n = X.mlstm_decode_step(p["m"], h, C, n, cfg)
+                return x + y, (C, n)
+
+            x, (mC, mN) = jax.lax.scan(mlayer, x, (mparams, mC, mN))
+            h = rms_norm(x, sparams["ln"], cfg.norm_eps)
+            st = {"c": sc, "n": sn, "h": sh, "m": sm}
+            y, st = X.slstm_decode_step(sparams["s"], h, st, cfg)
+            x = x + y
+            return x, (mC, mN, st["c"], st["n"], st["h"], st["m"])
+
+        x, (mC, mN, sc, sn, sh, sm) = jax.lax.scan(
+            group,
+            x,
+            (params["mlstm"], params["slstm"], cache["mC"], cache["mN"],
+             cache["sc"], cache["sn"], cache["sh"], cache["sm"]),
+        )
+        x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("...d,vd->...v", x, params["embed"]["table"])
+        return logits, {
+            "mC": mC, "mN": mN, "sc": sc, "sn": sn, "sh": sh, "sm": sm
+        }
+
+    return Model(cfg, specs, train_loss, prefill_logits, serve_step, cache_specs)

@@ -1,0 +1,252 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + sequential sLSTM (arXiv:2405.04517).
+
+TPU adaptation notes (DESIGN.md §6): the mLSTM matrix-memory recurrence
+``C_t = f_t C_{t-1} + i_t v_t k_t^T`` is a gated-linear-attention form, so we
+use the same chunked decomposition as SSD — intra-chunk dense matmuls on the
+MXU, inter-chunk state carry via ``lax.scan`` (:func:`gla_chunked`).  sLSTM
+has a true sequential dependency through its block-diagonal recurrent
+weights; it stays a ``lax.scan`` over time (the paper itself says sLSTM is
+not parallelizable), which XLA pipelines fine at the 1-in-8 cadence
+xLSTM-350m uses.  Both carry O(1) state for decode — the reason xlstm runs
+the ``long_500k`` cell that full-attention archs skip.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import ParamSpec, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# chunked gated linear attention (mLSTM core)
+# ---------------------------------------------------------------------------
+
+def gla_chunked(
+    q: jax.Array,    # (B, T, H, K)
+    k: jax.Array,    # (B, T, H, K)
+    v: jax.Array,    # (B, T, H, P)
+    a: jax.Array,    # (B, T, H) per-step decay in (0, 1]
+    i: jax.Array,    # (B, T, H) input-gate scale
+    chunk: int = 256,
+    c0: Optional[jax.Array] = None,
+    n0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """y_t = (q_t . C_t) / max(|q_t . n_t|, 1);  C_t = a_t C + i_t k_t v_t^T.
+
+    Returns (y, C_final (B,H,K,P), n_final (B,H,K)).
+    """
+    B, T, H, K = q.shape
+    P = v.shape[-1]
+    nc = max(1, (T + chunk - 1) // chunk)
+    pad = nc * chunk - T
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        i = jnp.pad(i, ((0, 0), (0, pad), (0, 0)))
+    f32 = jnp.float32
+    qc = q.reshape(B, nc, chunk, H, K).astype(f32) * (K ** -0.5)
+    kc = k.reshape(B, nc, chunk, H, K).astype(f32)
+    vc = v.reshape(B, nc, chunk, H, P).astype(f32)
+    ac = a.reshape(B, nc, chunk, H).astype(f32)
+    ic = i.reshape(B, nc, chunk, H).astype(f32)
+
+    loga = jnp.log(jnp.clip(ac, 1e-20))
+    cum = jnp.cumsum(loga, axis=2)                        # (B,nc,Q,H)
+    total = cum[:, :, -1:, :]
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,Q,S,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    qk = jnp.einsum("bnchk,bnshk->bncsh", qc, kc)
+    w = qk * L * ic[:, :, None, :, :]                     # gated scores
+    y_intra = jnp.einsum("bncsh,bnshp->bnchp", w, vc)
+    nrm_intra = jnp.einsum("bncsh,bnsh->bnch", w, jnp.ones_like(ic))
+
+    decay_to_end = jnp.exp(total - cum) * ic              # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bnshk,bnsh,bnshp->bnhkp", kc, decay_to_end, vc)
+    chunk_norm = jnp.einsum("bnshk,bnsh->bnhk", kc, decay_to_end)
+    chunk_decay = jnp.exp(total[:, :, 0, :])              # (B,nc,H)
+
+    def carry(cn, inp):
+        (C, n) = cn
+        cs, cn_, cd = inp
+        C_in, n_in = C, n
+        C = C * cd[:, :, None, None] + cs
+        n = n * cd[:, :, None] + cn_
+        return (C, n), (C_in, n_in)
+
+    if c0 is None:
+        c0 = jnp.zeros((B, H, K, P), f32)
+    if n0 is None:
+        n0 = jnp.zeros((B, H, K), f32)
+    cs_t = jnp.moveaxis(chunk_state, 1, 0)
+    cn_t = jnp.moveaxis(chunk_norm, 1, 0)
+    cd_t = jnp.moveaxis(chunk_decay, 1, 0)
+    (C_f, n_f), (C_prev, n_prev) = jax.lax.scan(carry, (c0, n0), (cs_t, cn_t, cd_t))
+    C_prev = jnp.moveaxis(C_prev, 0, 1)                   # (B,nc,H,K,P)
+    n_prev = jnp.moveaxis(n_prev, 0, 1)                   # (B,nc,H,K)
+
+    dstart = jnp.exp(cum)                                 # (B,nc,Q,H)
+    y_inter = jnp.einsum("bnchk,bnhkp,bnch->bnchp", qc, C_prev, dstart)
+    nrm_inter = jnp.einsum("bnchk,bnhk,bnch->bnch", qc, n_prev, dstart)
+    y = y_intra + y_inter
+    nrm = nrm_intra + nrm_inter
+    y = y / jnp.maximum(jnp.abs(nrm), 1.0)[..., None]
+    y = y.reshape(B, nc * chunk, H, P)[:, :T]
+    return y.astype(v.dtype), C_f, n_f
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    di = 2 * d  # proj factor 2
+    h = cfg.n_heads
+    return {
+        "w_up": ParamSpec((d, 2 * di), ("embed", "mlp")),
+        "wq": ParamSpec((di, di), ("mlp", "q_dim")),
+        "wk": ParamSpec((di, di), ("mlp", "q_dim")),
+        "wv": ParamSpec((di, di), ("mlp", "q_dim")),
+        "w_if": ParamSpec((di, 2 * h), ("mlp", None), init="zeros"),
+        "b_if": ParamSpec((2 * h,), (None,), init="zeros"),
+        "w_down": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def mlstm_block(params: Mapping[str, jax.Array], x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    b, t, d = x.shape
+    h = cfg.n_heads
+    di = 2 * d
+    up = jnp.einsum("btd,de->bte", x, params["w_up"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bte,ef->btf", xi, params["wq"]).reshape(b, t, h, di // h)
+    k = jnp.einsum("bte,ef->btf", xi, params["wk"]).reshape(b, t, h, di // h)
+    v = jnp.einsum("bte,ef->btf", xi, params["wv"]).reshape(b, t, h, di // h)
+    gates = jnp.einsum("bte,eg->btg", xi, params["w_if"]) + params["b_if"]
+    ig, fg = jnp.split(gates, 2, axis=-1)                 # (B,T,H) each
+    a = jax.nn.sigmoid(fg.astype(jnp.float32))            # forget in (0,1)
+    i = jnp.exp(jnp.clip(ig.astype(jnp.float32), -10.0, 10.0))
+    y, _, _ = gla_chunked(q, k, v, a, i)
+    y = y.reshape(b, t, di) * jax.nn.silu(z)
+    return jnp.einsum("bte,ed->btd", y, params["w_down"])
+
+
+def mlstm_decode_step(
+    params: Mapping[str, jax.Array],
+    x: jax.Array,                        # (B,1,d)
+    C: jax.Array, n: jax.Array,          # (B,H,K,P), (B,H,K)
+    cfg: ArchConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b, _, d = x.shape
+    h = cfg.n_heads
+    di = 2 * d
+    up = jnp.einsum("btd,de->bte", x, params["w_up"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bte,ef->btf", xi, params["wq"]).reshape(b, h, di // h)
+    k = jnp.einsum("bte,ef->btf", xi, params["wk"]).reshape(b, h, di // h)
+    v = jnp.einsum("bte,ef->btf", xi, params["wv"]).reshape(b, h, di // h)
+    gates = (jnp.einsum("bte,eg->btg", xi, params["w_if"]) + params["b_if"])[:, 0]
+    ig, fg = jnp.split(gates, 2, axis=-1)
+    a = jax.nn.sigmoid(fg.astype(jnp.float32))
+    i = jnp.exp(jnp.clip(ig.astype(jnp.float32), -10.0, 10.0))
+    C = C * a[:, :, None, None] + i[:, :, None, None] * jnp.einsum(
+        "bhk,bhp->bhkp", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n = n * a[:, :, None] + i[:, :, None] * k.astype(jnp.float32)
+    qs = q.astype(jnp.float32) * ((di // h) ** -0.5)
+    num = jnp.einsum("bhk,bhkp->bhp", qs, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qs, n)), 1.0)
+    y = (num / den[..., None]).reshape(b, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bte,ed->btd", y, params["w_down"]), C, n
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (sequential scan; block-diagonal recurrence per head)
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ArchConfig) -> Dict[str, ParamSpec]:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ff = ((4 * d // 3) + 127) // 128 * 128
+    return {
+        "w_in": ParamSpec((d, 4 * d), ("embed", "mlp")),      # z,i,f,o inputs
+        # block-diagonal recurrence: tiny (4 heads) — replicate, don't shard
+        "r": ParamSpec((4, h, dh, dh), (None, None, None, None), scale=0.1),
+        "b": ParamSpec((4 * d,), (None,), init="zeros"),
+        "ff_gate": ParamSpec((d, ff), ("embed", "mlp")),
+        "ff_up": ParamSpec((d, ff), ("embed", "mlp")),
+        "ff_down": ParamSpec((ff, d), ("mlp", "embed")),
+    }
+
+
+def _slstm_cell(params, xt, state, cfg: ArchConfig):
+    """xt: (B, 4d) precomputed input proj; state: dict of (B,H,dh)."""
+    h_heads = state["h"]
+    b, H, dh = h_heads.shape
+    rz, ri, rf, ro = params["r"]
+    rec = jnp.stack(
+        [jnp.einsum("bhd,hde->bhe", h_heads, r) for r in (rz, ri, rf, ro)],
+        axis=0,
+    )  # (4, B, H, dh)
+    zi, ii, fi, oi = jnp.split(xt + params["b"], 4, axis=-1)
+    shape = (b, H, dh)
+    z = jnp.tanh(zi.reshape(shape).astype(jnp.float32) + rec[0])
+    it = ii.reshape(shape).astype(jnp.float32) + rec[1]
+    ft = fi.reshape(shape).astype(jnp.float32) + rec[2]
+    o = jax.nn.sigmoid(oi.reshape(shape).astype(jnp.float32) + rec[3])
+    m = jnp.maximum(ft + state["m"], it)                  # stabiliser
+    i = jnp.exp(it - m)
+    f = jnp.exp(ft + state["m"] - m)
+    c = f * state["c"] + i * z
+    n = f * state["n"] + i
+    hh = o * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": hh, "m": m}
+
+
+def slstm_block(params: Mapping[str, jax.Array], x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    b, t, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    xin = jnp.einsum("btd,de->bte", x, params["w_in"])    # (B,T,4d)
+    state0 = {
+        "c": jnp.zeros((b, H, dh), jnp.float32),
+        "n": jnp.zeros((b, H, dh), jnp.float32),
+        "h": jnp.zeros((b, H, dh), jnp.float32),
+        "m": jnp.full((b, H, dh), -1e9, jnp.float32),
+    }
+
+    def step(state, xt):
+        new = _slstm_cell(params, xt, state, cfg)
+        return new, new["h"]
+
+    _, hs = jax.lax.scan(step, state0, jnp.moveaxis(xin, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, t, d).astype(x.dtype)
+    # post-block gated FFN (proj factor 4/3, GeGLU)
+    g = jax.nn.gelu(jnp.einsum("btd,df->btf", y, params["ff_gate"]), approximate=True)
+    u = jnp.einsum("btd,df->btf", y, params["ff_up"])
+    return jnp.einsum("btf,fd->btd", g * u, params["ff_down"])
+
+
+def slstm_decode_step(
+    params: Mapping[str, jax.Array],
+    x: jax.Array,                         # (B,1,d)
+    state: Dict[str, jax.Array],
+    cfg: ArchConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, _, d = x.shape
+    xt = jnp.einsum("btd,de->bte", x, params["w_in"])[:, 0]
+    new = _slstm_cell(params, xt, state, cfg)
+    y = new["h"].reshape(b, 1, d).astype(x.dtype)
+    g = jax.nn.gelu(jnp.einsum("btd,df->btf", y, params["ff_gate"]), approximate=True)
+    u = jnp.einsum("btd,df->btf", y, params["ff_up"])
+    return jnp.einsum("btf,fd->btd", g * u, params["ff_down"]), new

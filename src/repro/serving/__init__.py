@@ -1,0 +1,7 @@
+from .kv_cache import PagePool, RequestKV, prefix_hash
+from .engine import EngineStats, Request, ServingEngine
+
+__all__ = [
+    "EngineStats", "PagePool", "Request", "RequestKV", "ServingEngine",
+    "prefix_hash",
+]

@@ -1,0 +1,210 @@
+"""Continuous-batching serving engine with policy-driven KV tiering.
+
+The scheduler is where the paper's insight lands in serving: under HBM
+oversubscription some request's pages must leave the pool, and the
+scheduler *knows the future* — its own queue discloses which request will
+run furthest in the future.  Three interchangeable preemption policies:
+
+* ``lru``    — preempt the least-recently-decoded active request (classic);
+* ``pbm``    — preempt the request with the largest estimated time to next
+  schedule slot (queue position / measured decode rate) — the paper's
+  time-of-next-consumption estimate;
+* ``belady`` — preempt the request that is *provably* scheduled furthest
+  (exact queue order) — OPT, implementable here because the scheduler is
+  the oracle (DESIGN.md §2: the paper's "unattainable" OPT becomes
+  attainable when the future is the scheduler's own plan).
+
+Token generation is abstracted behind ``step_fn`` so the engine (page
+management = the paper's contribution) is testable without a model;
+``examples/serve_paged.py`` wires a real tiny model through
+``kernels.paged_attention``.
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+from .kv_cache import PagePool, RequestKV
+
+_req_ids = itertools.count()
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int
+    rid: int = field(default_factory=lambda: next(_req_ids))
+    generated: List[int] = field(default_factory=list)
+    kv: Optional[RequestKV] = None
+    last_decode_step: int = -1
+    arrival_step: int = 0
+    admitted_step: int = -1
+    swapped: bool = False
+    done: bool = False
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.generated)
+
+
+@dataclass
+class EngineStats:
+    steps: int = 0
+    tokens_generated: int = 0
+    prefills: int = 0
+    preemptions: int = 0
+    shared_prefix_pages: int = 0
+    swap_out_bytes: int = 0
+    swap_in_bytes: int = 0
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        pool: PagePool,
+        step_fn: Callable[[Sequence[Request]], List[int]],
+        policy: str = "pbm",
+        max_batch: int = 8,
+    ) -> None:
+        assert policy in ("lru", "pbm", "belady")
+        self.pool = pool
+        self.step_fn = step_fn
+        self.policy = policy
+        self.max_batch = max_batch
+        self.pending: Deque[Request] = deque()
+        self.active: List[Request] = []
+        self.swapped: Deque[Request] = deque()
+        self.finished: List[Request] = []
+        self.stats = EngineStats()
+        self._decode_rate = 1.0  # tokens/step/request (measured)
+
+    # ---------------------------------------------------------------- admit
+    def submit(self, req: Request) -> None:
+        req.arrival_step = self.stats.steps
+        self.pending.append(req)
+
+    def _try_admit(self) -> None:
+        # Admission control: swap-in/prefill happen only out of FREE pages —
+        # preemption is reserved for *growth* of already-running requests
+        # (step()), where the victim choice is the policy decision under
+        # test.  Without this watermark the engine thrashes exactly like an
+        # unthrottled buffer pool.
+        watermark = max(2, len(self.active))
+        # resume swapped requests first (they block the queue's head)
+        while self.swapped and len(self.active) < self.max_batch:
+            req = self.swapped[0]
+            if self.pool.free_count < len(req.kv.pages) + watermark and self.active:
+                break
+            mapping = self.pool.swap_in(req.kv.pages)
+            if mapping is None:
+                if self.active or not self._make_room(for_swap_in=len(req.kv.pages)):
+                    break
+                continue
+            req.kv.pages = [mapping.get(p, p) for p in req.kv.pages]
+            req.swapped = False
+            req.admitted_step = self.stats.steps
+            self.swapped.popleft()
+            self.active.append(req)
+        while self.pending and len(self.active) < self.max_batch:
+            req = self.pending[0]
+            need = len(req.prompt) // self.pool.page_size + 1
+            if self.pool.free_count < need + watermark and self.active:
+                break
+            kv = RequestKV(self.pool, self.pool.page_size)
+            shared = kv.attach_prefix(req.prompt)
+            if shared < 0:
+                kv.release_all()
+                if self.active or not self._make_room():
+                    break
+                continue
+            self.stats.shared_prefix_pages += shared
+            req.kv = kv
+            req.admitted_step = self.stats.steps
+            self.stats.prefills += 1
+            self.pending.popleft()
+            self.active.append(req)
+
+    # ------------------------------------------------------------- preempt
+    def _victim(self) -> Optional[Request]:
+        # anti-ping-pong: a request admitted THIS step is not preemptible,
+        # so each request swaps at most once per engine step.
+        cands = [r for r in self.active if r.admitted_step != self.stats.steps]
+        if not cands:
+            return None
+        if self.policy == "lru":
+            return min(cands, key=lambda r: r.last_decode_step)
+        # next consumption time = when this request would next be scheduled.
+        # With continuous batching every active request decodes each step, so
+        # the victim is the one whose *completion* (then re-queue of others)
+        # is furthest — approximated by remaining work (pbm: estimated via
+        # measured rate; belady: exact remaining tokens).
+        if self.policy == "pbm":
+            rate = max(self._decode_rate, 1e-6)
+            return max(cands, key=lambda r: r.remaining / rate)
+        return max(cands, key=lambda r: r.remaining)   # belady
+
+    def _make_room(self, for_swap_in: int = 0) -> bool:
+        """Preempt until at least one HBM slot is actually freed.
+
+        A victim whose pages are all shared prefix pages frees nothing
+        (shared chunks stay resident); keep preempting further victims and
+        report False if no candidate frees a slot."""
+        progressed = False
+        while not progressed:
+            victim = self._victim()
+            if victim is None:
+                return False
+            self.active.remove(victim)
+            victim.swapped = True
+            mapping = self.pool.swap_out(victim.kv.pages)
+            victim.kv.pages = [mapping.get(p, p) for p in victim.kv.pages]
+            self.swapped.append(victim)
+            self.stats.preemptions += 1
+            progressed = bool(mapping)
+        return True
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> int:
+        """One engine iteration: admit, decode one token per active request."""
+        self._try_admit()
+        if not self.active:
+            self.stats.steps += 1
+            return 0
+        # ensure every active request has a slot for one more token
+        runnable: List[Request] = []
+        for req in list(self.active):
+            if req.kv.append_tokens(1):
+                runnable.append(req)
+            else:
+                if not self._make_room():
+                    break
+                if req.kv.append_tokens(1):
+                    runnable.append(req)
+        # a runnable request may have been chosen as a growth victim for a
+        # later request in the same pass — only decode those still active
+        runnable = [r for r in runnable if not r.swapped]
+        new_tokens = self.step_fn(runnable)
+        for req, tok in zip(runnable, new_tokens):
+            req.generated.append(int(tok))
+            req.last_decode_step = self.stats.steps
+            if req.remaining <= 0:
+                req.done = True
+                req.kv.release_all()
+                self.active.remove(req)
+                self.finished.append(req)
+        self.stats.steps += 1
+        self.stats.tokens_generated += len(runnable)
+        self._decode_rate = 0.9 * self._decode_rate + 0.1 * max(len(runnable), 1) / max(
+            len(self.active) + len(self.swapped), 1
+        )
+        self.stats.swap_out_bytes = self.pool.swap_out_bytes
+        self.stats.swap_in_bytes = self.pool.swap_in_bytes
+        return len(runnable)
+
+    def run_to_completion(self, max_steps: int = 100_000) -> EngineStats:
+        while (self.pending or self.active or self.swapped) and self.stats.steps < max_steps:
+            self.step()
+        return self.stats

@@ -1,0 +1,106 @@
+"""PagedTinyLM: a small decoder LM that decodes *through* the page pool.
+
+Integration glue between the three layers of the serving stack:
+``kernels.paged_attention`` (compute) <- page tables from ``kv_cache``
+(policy-managed pool) <- scheduled by ``engine`` (continuous batching).
+Used by examples/serve_paged.py and the integration tests; production archs
+would plug their own weights into the same layout.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from .engine import Request
+from .kv_cache import PagePool
+
+
+@dataclass
+class TinyConfig:
+    vocab: int = 512
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    n_kv_heads: int = 1
+    head_dim: int = 128
+    page_size: int = 16
+    n_pages: int = 128
+
+
+class PagedTinyLM:
+    def __init__(self, cfg: TinyConfig, seed: int = 0):
+        self.cfg = cfg
+        rng = np.random.default_rng(seed)
+        d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        s = lambda *sh: jnp.asarray(rng.normal(0, 0.05, sh), jnp.float32)
+        self.params = {
+            "embed": s(cfg.vocab, d),
+            "layers": [
+                {
+                    "wq": s(d, h * dh), "wk": s(d, hk * dh), "wv": s(d, hk * dh),
+                    "wo": s(h * dh, d), "w1": s(d, 4 * d), "w2": s(4 * d, d),
+                }
+                for _ in range(cfg.n_layers)
+            ],
+        }
+        # the physical page pool arrays, one per layer
+        self.k_pages = [
+            jnp.zeros((cfg.n_pages, cfg.page_size, hk, dh), jnp.float32)
+            for _ in range(cfg.n_layers)
+        ]
+        self.v_pages = [
+            jnp.zeros((cfg.n_pages, cfg.page_size, hk, dh), jnp.float32)
+            for _ in range(cfg.n_layers)
+        ]
+
+    # ------------------------------------------------------------- helpers
+    def _write_kv(self, layer: int, page_id: int, slot: int, k, v) -> None:
+        self.k_pages[layer] = self.k_pages[layer].at[page_id, slot].set(k)
+        self.v_pages[layer] = self.v_pages[layer].at[page_id, slot].set(v)
+
+    def _forward_token(
+        self, token: int, kv_pages: List[int], pos: int, write: bool = True
+    ) -> jnp.ndarray:
+        cfg = self.cfg
+        x = self.params["embed"][token][None]          # (1, d)
+        page = kv_pages[pos // cfg.page_size]
+        slot = pos % cfg.page_size
+        pt = jnp.asarray([kv_pages], jnp.int32)
+        sl = jnp.asarray([pos + 1], jnp.int32)
+        for li, lp in enumerate(self.params["layers"]):
+            q = (x @ lp["wq"]).reshape(cfg.n_heads, cfg.head_dim)
+            k = (x @ lp["wk"]).reshape(cfg.n_kv_heads, cfg.head_dim)
+            v = (x @ lp["wv"]).reshape(cfg.n_kv_heads, cfg.head_dim)
+            if write:
+                self._write_kv(li, page, slot, k, v)
+            att = ops.paged_attention(
+                q[None], self.k_pages[li], self.v_pages[li], pt, sl
+            )[0]                                        # (H, dh)
+            x = x + att.reshape(1, -1) @ lp["wo"]
+            x = x + jax.nn.gelu(x @ lp["w1"]) @ lp["w2"]
+        logits = x @ self.params["embed"].T
+        return logits[0]
+
+    # ------------------------------------------------------- engine step_fn
+    def prefill(self, req: Request) -> None:
+        for i, tok in enumerate(req.prompt):
+            self._forward_token(int(tok), req.kv.pages, i)
+
+    def step_fn(self, reqs: Sequence[Request]) -> List[int]:
+        out = []
+        for req in reqs:
+            if req.last_decode_step < 0:
+                self.prefill(req)
+                last_tok = req.prompt[-1]
+            else:
+                last_tok = req.generated[-1]
+            pos = req.kv.length - 1   # slot already reserved by the engine
+            logits = self._forward_token(int(last_tok), req.kv.pages, pos)
+            out.append(int(jnp.argmax(logits)))
+        return out

@@ -1,0 +1,115 @@
+"""AdamW with global-norm clipping and warmup-cosine schedule.
+
+Sharding: the optimizer state tree mirrors the parameter tree, so m/v
+inherit the params' PartitionSpecs (FSDP over "data" + TP over "model" in
+train mode) — ZeRO-style sharded optimizer state for free.  Moments are kept
+in f32 regardless of the param dtype (bf16 params + f32 moments is the
+standard large-scale JAX recipe).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any       # f32 tree like params
+    nu: Any       # f32 tree like params
+
+
+def init_opt_state(params: Any) -> OptState:
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+
+def abstract_opt_state(params: Any) -> OptState:
+    z = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+    return OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=z,
+        nu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), z),
+    )
+
+
+def opt_state_shardings(param_specs_tree: Any) -> OptState:
+    """PartitionSpec tree for OptState given the params' spec tree."""
+    from jax.sharding import PartitionSpec as P
+
+    return OptState(
+        step=P(),
+        mu=param_specs_tree,
+        nu=jax.tree.map(lambda s: s, param_specs_tree),
+    )
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step_f = step.astype(jnp.float32)
+    warm = cfg.learning_rate * jnp.minimum(1.0, (step_f + 1) / max(1, cfg.warmup_steps))
+    frac = jnp.clip(
+        (step_f - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step_f < cfg.warmup_steps, warm, cfg.learning_rate * cos)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    cfg: OptimizerConfig, params: Any, grads: Any, state: OptState
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = lr_at(cfg, state.step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_v = jax.tree.leaves(state.nu)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        np_, nm, nv = upd(p, g, m, v)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        OptState(step=step, mu=jax.tree.unflatten(treedef, new_m),
+                 nu=jax.tree.unflatten(treedef, new_v)),
+        {"grad_norm": gnorm, "lr": lr},
+    )

@@ -1,0 +1,102 @@
+"""Engine integration tests: completion, conservation, policy orderings."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EngineConfig, run_workload
+from repro.core.workload import (
+    make_lineitem_db,
+    micro_accessed_bytes,
+    micro_streams,
+)
+
+SCALE = 4_000_000  # tuples (1/45 of SF30): fast but non-trivial
+
+
+@pytest.fixture(scope="module")
+def db():
+    return make_lineitem_db(scale_tuples=SCALE, page_bytes=16 << 10)
+
+
+@pytest.fixture(scope="module")
+def ws(db):
+    return micro_accessed_bytes(db)
+
+
+ALL_POLICIES = ["lru", "mru", "pbm", "opt", "cscan", "pbm_lru", "attach"]
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_all_policies_complete(db, ws, policy):
+    streams = micro_streams(db, n_streams=4, queries_per_stream=4, seed=11)
+    cfg = EngineConfig(bandwidth=700e6, buffer_bytes=int(0.4 * ws),
+                       sample_interval=0.5)
+    r = run_workload(db, streams, policy, cfg)
+    assert len(r.stream_times) == 4
+    assert all(t > 0 for t in r.stream_times)
+    assert len(r.query_latencies) == 16
+    assert r.total_io_bytes > 0
+
+
+def test_cold_run_loads_at_least_working_set(db, ws):
+    streams = [[s for st_ in micro_streams(db, 1, 1, fraction=1.0, seed=1)
+                for s in st_]]
+    cfg = EngineConfig(bandwidth=1e9, buffer_bytes=2 * ws)
+    r = run_workload(db, streams, "lru", cfg)
+    spec = streams[0][0]
+    t = db.tables[spec.table]
+    expected = t.scan_bytes(spec.columns, *spec.ranges[0])
+    assert r.total_io_bytes == expected  # big buffer: exactly one load each
+
+
+def test_big_buffer_makes_policies_equal(db, ws):
+    streams = micro_streams(db, n_streams=4, queries_per_stream=4, seed=5)
+    ios = {}
+    for pol in ("lru", "pbm", "opt"):
+        cfg = EngineConfig(bandwidth=700e6, buffer_bytes=2 * ws)
+        ios[pol] = run_workload(db, streams, pol, cfg).total_io_bytes
+    assert ios["lru"] == ios["pbm"] == ios["opt"]
+
+
+def test_policy_ordering_under_pressure(db, ws):
+    """The paper's headline: PBM and CScans beat LRU at medium pressure."""
+    streams = micro_streams(db, n_streams=8, queries_per_stream=8, seed=3)
+    res = {}
+    for pol in ("lru", "pbm", "cscan"):
+        cfg = EngineConfig(bandwidth=700e6, buffer_bytes=int(0.4 * ws),
+                           sample_interval=1.0, pbm_time_slice=0.01)
+        res[pol] = run_workload(db, streams, pol, cfg)
+    assert res["pbm"].total_io_bytes < res["lru"].total_io_bytes
+    assert res["cscan"].total_io_bytes < res["lru"].total_io_bytes
+    assert res["pbm"].avg_stream_time < res["lru"].avg_stream_time
+
+
+def test_determinism(db, ws):
+    streams = micro_streams(db, n_streams=2, queries_per_stream=3, seed=9)
+    cfg = EngineConfig(bandwidth=700e6, buffer_bytes=int(0.3 * ws))
+    a = run_workload(db, streams, "pbm", cfg)
+    b = run_workload(db, streams, "pbm", cfg)
+    assert a.total_io_bytes == b.total_io_bytes
+    assert a.stream_times == b.stream_times
+
+
+def test_trace_recording_matches_consumption(db, ws):
+    streams = micro_streams(db, n_streams=2, queries_per_stream=2, seed=4)
+    cfg = EngineConfig(bandwidth=700e6, buffer_bytes=int(0.4 * ws),
+                       record_trace=True)
+    r = run_workload(db, streams, "pbm", cfg)
+    total_plan = sum(len(__import__("repro.core.scans", fromlist=["ScanState"])
+                         .ScanState(s, db).plan)
+                     for stream in streams for s in stream)
+    assert len(r.trace) == total_plan
+
+
+def test_sharing_samples_have_bytes(db, ws):
+    streams = micro_streams(db, n_streams=8, queries_per_stream=4,
+                            fraction=1.0, seed=2)
+    cfg = EngineConfig(bandwidth=400e6, buffer_bytes=int(0.3 * ws),
+                       sample_interval=0.25)
+    r = run_workload(db, streams, "pbm", cfg)
+    assert r.sharing_samples
+    # with 8 full-table scans there must be moments with >= 2-way sharing
+    assert any(k >= 2 for s in r.sharing_samples for k in s)

@@ -1,0 +1,185 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties.
+
+All kernels run in interpret mode (CPU executes the kernel body in Python);
+on TPU the same pallas_call lowers to Mosaic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.mamba2_scan import mamba2_scan_kernel
+from repro.kernels.mlstm import mlstm_chunked_kernel
+from repro.kernels.paged_attention import paged_attention_kernel
+from repro.kernels import ref
+from repro.models.ssm import ssd_chunked
+from repro.models.xlstm import gla_chunked
+
+RNG = np.random.default_rng(0)
+
+
+def randn(*shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(0, scale, shape), dtype)
+
+
+# ------------------------------------------------------- paged attention ---
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,H,Hk,dh,page_size,pages_per_seq",
+    [
+        (2, 4, 1, 128, 16, 2),     # MQA
+        (4, 8, 2, 128, 16, 4),     # GQA 4:1
+        (1, 2, 2, 256, 8, 3),      # MHA, gemma head_dim
+        (3, 6, 2, 128, 32, 2),     # qwen-like 3:1
+    ],
+)
+def test_paged_attention_sweep(B, H, Hk, dh, page_size, pages_per_seq, dtype):
+    n_pages = B * pages_per_seq + 4
+    q = randn(B, H, dh, dtype=dtype)
+    kp = randn(n_pages, page_size, Hk, dh, dtype=dtype, scale=0.5)
+    vp = randn(n_pages, page_size, Hk, dh, dtype=dtype, scale=0.5)
+    pt = jnp.asarray(
+        RNG.permutation(n_pages)[: B * pages_per_seq].reshape(B, pages_per_seq),
+        jnp.int32,
+    )
+    sl = jnp.asarray(
+        RNG.integers(1, pages_per_seq * page_size + 1, B), jnp.int32
+    )
+    out = paged_attention_kernel(q, kp, vp, pt, sl, interpret=True)
+    exp = ref.paged_attention_ref(q, kp, vp, pt, sl)
+    atol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), atol=atol,
+        rtol=atol,
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(1, 3), st.integers(1, 2), st.integers(1, 3), st.integers(1, 4),
+    st.randoms(),
+)
+def test_paged_attention_property(b, hk, g, pages, rnd):
+    """Random GQA ratios, page tables and ragged lengths agree with oracle."""
+    h = hk * g
+    dh, page_size = 128, 8
+    n_pages = b * pages + 2
+    rng = np.random.default_rng(rnd.randrange(1 << 30))
+    q = jnp.asarray(rng.normal(size=(b, h, dh)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(n_pages, page_size, hk, dh)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pages, page_size, hk, dh)), jnp.float32)
+    pt = jnp.asarray(rng.permutation(n_pages)[: b * pages].reshape(b, pages),
+                     jnp.int32)
+    sl = jnp.asarray(rng.integers(1, pages * page_size + 1, b), jnp.int32)
+    out = paged_attention_kernel(q, kp, vp, pt, sl, interpret=True)
+    exp = ref.paged_attention_ref(q, kp, vp, pt, sl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=5e-5,
+                               rtol=5e-5)
+
+
+# ------------------------------------------------------- flash attention ---
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "T,S,window,causal",
+    [(128, 128, None, True), (192, 192, 64, True), (96, 96, None, False),
+     (130, 130, 32, True)],
+)
+def test_flash_attention_sweep(T, S, window, causal, dtype):
+    q = randn(2, T, 4, 128, dtype=dtype, scale=0.5)
+    k = randn(2, S, 4, 128, dtype=dtype, scale=0.5)
+    v = randn(2, S, 4, 128, dtype=dtype, scale=0.5)
+    out = flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                 block_q=64, block_kv=64, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    atol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=atol, rtol=atol)
+
+
+def test_flash_matches_blocked_reference_train_path():
+    from repro.models.attention import blocked_attention
+    q = randn(1, 160, 2, 128, scale=0.5)
+    k = randn(1, 160, 2, 128, scale=0.5)
+    v = randn(1, 160, 2, 128, scale=0.5)
+    a = blocked_attention(q, k, v, causal=True)
+    b = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5, rtol=3e-5)
+
+
+# ------------------------------------------------------------ mamba2 scan --
+
+@pytest.mark.parametrize("T,chunk", [(128, 64), (100, 32), (256, 128)])
+def test_mamba2_scan_kernel(T, chunk):
+    B, H, P, N = 2, 2, 64, 64
+    xh = randn(B, T, H, P, scale=0.5)
+    a = jnp.asarray(RNG.uniform(0.6, 1.0, (B, T, H)), jnp.float32)
+    b = randn(B, T, N, scale=0.3)
+    c = randn(B, T, N, scale=0.3)
+    yk = mamba2_scan_kernel(xh, a, b, c, chunk=chunk, interpret=True)
+    yr, _ = ref.mamba2_scan_ref(xh, a, b, c)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=2e-3,
+                               rtol=2e-3)
+
+
+def test_ssd_chunked_jnp_matches_sequential():
+    B, T, H, P, N = 2, 192, 3, 32, 16
+    xh = randn(B, T, H, P, scale=0.5)
+    a = jnp.asarray(RNG.uniform(0.7, 1.0, (B, T, H)), jnp.float32)
+    b = randn(B, T, N, scale=0.3)
+    c = randn(B, T, N, scale=0.3)
+    yj, hj = ssd_chunked(xh, a, b, c, chunk=64)
+    yr, hr = ref.mamba2_scan_ref(xh, a, b, c)
+    np.testing.assert_allclose(np.asarray(yj), np.asarray(yr), atol=2e-3,
+                               rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(hj), np.asarray(hr), atol=2e-3,
+                               rtol=2e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(16, 80), st.integers(1, 3), st.randoms())
+def test_mamba2_state_carry_property(T, B, rnd):
+    """Chunked scan's final state equals the sequential recurrence's."""
+    rng = np.random.default_rng(rnd.randrange(1 << 30))
+    H, P, N = 2, 16, 8
+    xh = jnp.asarray(rng.normal(0, 0.5, (B, T, H, P)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.6, 1.0, (B, T, H)), jnp.float32)
+    b = jnp.asarray(rng.normal(0, 0.3, (B, T, N)), jnp.float32)
+    c = jnp.asarray(rng.normal(0, 0.3, (B, T, N)), jnp.float32)
+    _, h1 = ssd_chunked(xh, a, b, c, chunk=32)
+    _, h2 = ref.mamba2_scan_ref(xh, a, b, c)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-3,
+                               rtol=2e-3)
+
+
+# ---------------------------------------------------------------- mLSTM ----
+
+@pytest.mark.parametrize("T,chunk", [(128, 64), (96, 32)])
+def test_mlstm_kernel(T, chunk):
+    B, H, K, P = 2, 2, 64, 64
+    q = randn(B, T, H, K)
+    k = randn(B, T, H, K, scale=0.3)
+    v = randn(B, T, H, P)
+    a = jnp.asarray(RNG.uniform(0.7, 1.0, (B, T, H)), jnp.float32)
+    i = jnp.asarray(RNG.uniform(0.1, 1.0, (B, T, H)), jnp.float32)
+    yk = mlstm_chunked_kernel(q, k, v, a, i, chunk=chunk, interpret=True)
+    yr = ref.gla_ref(q, k, v, a, i)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr), atol=2e-3,
+                               rtol=2e-3)
+
+
+def test_gla_chunked_jnp_matches_sequential():
+    B, T, H, K, P = 1, 160, 2, 32, 32
+    q = randn(B, T, H, K)
+    k = randn(B, T, H, K, scale=0.3)
+    v = randn(B, T, H, P)
+    a = jnp.asarray(RNG.uniform(0.8, 1.0, (B, T, H)), jnp.float32)
+    i = jnp.asarray(RNG.uniform(0.1, 1.0, (B, T, H)), jnp.float32)
+    yj, _, _ = gla_chunked(q, k, v, a, i, chunk=64)
+    yr = ref.gla_ref(q, k, v, a, i)
+    np.testing.assert_allclose(np.asarray(yj), np.asarray(yr), atol=2e-3,
+                               rtol=2e-3)

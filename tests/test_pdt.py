@@ -1,0 +1,107 @@
+"""PDT SID/RID translation (paper §2.1 Fig. 4) — unit + property tests."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PDT, CScanMergeState
+
+
+def test_identity_when_empty():
+    p = PDT(10)
+    for s in range(10):
+        assert p.sid_to_rid_low(s) == s
+        assert p.sid_to_rid_high(s) == s
+        assert p.rid_to_sid(s) == s
+
+
+def test_paper_example_semantics():
+    # delete sid 3; two inserts anchored at 5
+    p = PDT(10)
+    p.delete(3)
+    p.insert(5, "a")
+    p.insert(5, "b")
+    assert p.n_visible == 11
+    # deleted tuple: no RID maps to it, but its SID still translates to the
+    # lowest RID of a higher SID (paper: one-way arrows)
+    assert p.sid_to_rid_low(3) == 3
+    assert p.sid_to_rid_high(3) == 3
+    assert p.rid_to_sid(3) == 4            # rid 3 is stable tuple sid=4
+    # inserts widen sid 5's rid range: [low, high] = [4, 6]
+    assert p.sid_to_rid_low(5) == 4
+    assert p.sid_to_rid_high(5) == 6
+    # rid->sid is NOT injective: rids 4,5,6 all map to sid 5
+    assert [p.rid_to_sid(r) for r in (4, 5, 6)] == [5, 5, 5]
+
+
+def test_merge_state_trims_overlap():
+    p = PDT(10)
+    p.delete(3)
+    p.insert(5, "a")
+    p.insert(5, "b")
+    m = CScanMergeState()
+    # out-of-order delivery: second half first
+    r2 = m.deliver_chunk(p, 5, 10)
+    r1 = m.deliver_chunk(p, 0, 5)
+    produced = sorted(r1 + r2)
+    # full coverage, no duplicates
+    assert m.produced_count == p.n_visible
+    flat = []
+    for a, b in produced:
+        flat.extend(range(a, b))
+    assert flat == list(range(p.n_visible))
+
+
+@st.composite
+def pdt_ops(draw):
+    n = draw(st.integers(4, 60))
+    ops = draw(
+        st.lists(
+            st.tuples(
+                st.sampled_from(["ins", "del", "mod"]),
+                st.integers(0, n - 1),
+            ),
+            max_size=25,
+        )
+    )
+    return n, ops
+
+
+@settings(max_examples=60, deadline=None)
+@given(pdt_ops())
+def test_roundtrip_property(case):
+    """Every visible RID maps into [low(sid), high(sid)] of its SID, and
+    low/high are monotone in SID."""
+    n, ops = case
+    p = PDT(n)
+    for kind, pos in ops:
+        if kind == "ins":
+            p.insert(pos)
+        elif kind == "del":
+            p.delete(pos)
+        else:
+            p.modify(pos, 42)
+    lows = [p.sid_to_rid_low(s) for s in range(n + 1)]
+    assert lows == sorted(lows)
+    for r in range(p.n_visible):
+        s = p.rid_to_sid(r)
+        assert p.sid_to_rid_low(s) <= r <= p.sid_to_rid_high(s)
+
+
+@settings(max_examples=40, deadline=None)
+@given(pdt_ops(), st.randoms())
+def test_out_of_order_merge_covers_everything(case, rnd):
+    n, ops = case
+    p = PDT(n)
+    for kind, pos in ops:
+        if kind == "ins":
+            p.insert(pos)
+        elif kind == "del":
+            p.delete(pos)
+    # random chunking, random delivery order (ABM out-of-order delivery)
+    bounds = sorted({0, n} | {rnd.randrange(0, n + 1) for _ in range(3)})
+    chunks = list(zip(bounds[:-1], bounds[1:]))
+    rnd.shuffle(chunks)
+    m = CScanMergeState()
+    for lo, hi in chunks:
+        m.deliver_chunk(p, lo, hi)
+    assert m.produced_count == p.n_visible

@@ -1,0 +1,207 @@
+"""Policy unit + property tests: PBM bucket geometry, Belady optimality,
+eviction preferences, shared-chunk behaviour of ABM relevance functions."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    ABM,
+    BufferPool,
+    Database,
+    EngineConfig,
+    LRUPolicy,
+    OraclePolicy,
+    PBMPolicy,
+    ScanSpec,
+    ScanState,
+    simulate_belady,
+)
+from repro.core.pages import PageId
+
+
+def make_db(n_tuples=100_000, cols=2, page_bytes=1 << 12):
+    db = Database()
+    db.add_table(
+        "t",
+        n_tuples=n_tuples,
+        columns={f"c{i}": 1.0 for i in range(cols)},
+        chunk_tuples=20_000,
+        page_bytes=page_bytes,
+    )
+    return db
+
+
+# ---------------------------------------------------------------- PBM ------
+
+def test_time_to_bucket_monotone_and_bounded():
+    p = PBMPolicy(time_slice=0.1, n_groups=5, buckets_per_group=4)
+    prev = 0
+    for i in range(2000):
+        t = i * 0.01
+        b = p.time_to_bucket(t)
+        assert 0 <= b < p.nb
+        assert b >= prev or b == p.nb - 1
+        prev = max(prev, b)
+    assert p.time_to_bucket(0.0) == 0
+    assert p.time_to_bucket(1e9) == p.nb - 1
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.floats(0, 1e6), st.integers(2, 8), st.integers(2, 8))
+def test_time_to_bucket_property(t, groups, m):
+    p = PBMPolicy(time_slice=0.05, n_groups=groups, buckets_per_group=m)
+    b = p.time_to_bucket(t)
+    assert 0 <= b < p.nb
+    # bucket widths double per group: recompute the bucket's range and check
+    g = b // m
+    start = m * ((1 << g) - 1) * p.time_slice
+    width = (1 << g) * p.time_slice
+    lo = start + (b - g * m) * width
+    if b < p.nb - 1:
+        assert lo <= t + 1e-9
+        assert t < lo + width + 1e-6
+
+
+def test_pbm_evicts_furthest_future_first():
+    db = make_db()
+    near = ScanState(ScanSpec("t", ("c0",), ((0, 100_000),), tuple_rate=1e6), db)
+    far = ScanState(ScanSpec("t", ("c1",), ((0, 100_000),), tuple_rate=1e3), db)
+    p_near = near.plan[2][1]   # needed soon (fast scan)
+    p_far = far.plan[20][1]    # needed late (slow scan, deep page)
+    pool = BufferPool(capacity_bytes=p_near.size_bytes + p_far.size_bytes)
+    pbm = PBMPolicy()
+    pbm.attach(pool, 0.0)
+    pbm.register_scan(near, 0.0)
+    pbm.register_scan(far, 0.0)
+    for pg in (p_near, p_far):
+        pool.admit(pg)
+        pbm.on_loaded(pg, 0.0)
+    victims = pbm.choose_victims(p_far.size_bytes, set(), 0.0)
+    assert victims and victims[0].pid == p_far.pid
+
+
+def test_pbm_not_requested_evicted_first():
+    db = make_db()
+    scan = ScanState(ScanSpec("t", ("c0",), ((0, 100_000),), tuple_rate=1e6), db)
+    wanted = scan.plan[0][1]
+    unwanted = db.tables["t"].columns["c1"].pages[0]
+    pool = BufferPool(capacity_bytes=wanted.size_bytes + unwanted.size_bytes)
+    pbm = PBMPolicy()
+    pbm.attach(pool, 0.0)
+    pbm.register_scan(scan, 0.0)
+    for pg in (wanted, unwanted):
+        pool.admit(pg)
+        pbm.on_loaded(pg, 0.0)
+    victims = pbm.choose_victims(unwanted.size_bytes, set(), 0.0)
+    assert victims[0].pid == unwanted.pid
+
+
+def test_pbm_bucket_refresh_shifts_left():
+    pbm = PBMPolicy(time_slice=0.1, n_groups=3, buckets_per_group=2)
+    pool = BufferPool(capacity_bytes=1 << 30)
+    pbm.attach(pool, 0.0)
+    db = make_db()
+    scan = ScanState(ScanSpec("t", ("c0",), ((0, 100_000),), tuple_rate=1e5), db)
+    pbm.register_scan(scan, 0.0)
+    page = scan.plan[-1][1]
+    pool.admit(page)
+    pbm.on_loaded(page, 0.0)
+    b0 = pbm._meta[page.pid].bucket
+    pbm.refresh_requested_buckets(0.35)   # 3 slices pass
+    b1 = pbm._meta[page.pid].bucket
+    assert b1 <= b0
+
+
+# ------------------------------------------------------------- Belady ------
+
+def _lru_trace_misses(trace, capacity):
+    resident = []
+    misses = 0
+    for pid in trace:
+        if pid in resident:
+            resident.remove(pid)
+            resident.append(pid)
+            continue
+        misses += 1
+        if len(resident) >= capacity:
+            resident.pop(0)
+        resident.append(pid)
+    return misses
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.lists(st.integers(0, 12), min_size=5, max_size=200),
+    st.integers(2, 8),
+)
+def test_belady_not_worse_than_lru(ref_ints, capacity):
+    trace = [PageId("t", "c", i) for i in ref_ints]
+    opt_misses, _ = simulate_belady(trace, capacity_pages=capacity)
+    lru_misses = _lru_trace_misses(trace, capacity)
+    assert opt_misses <= lru_misses
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 6), min_size=5, max_size=40), st.integers(2, 4),
+       st.randoms())
+def test_belady_not_worse_than_random(ref_ints, capacity, rnd):
+    trace = [PageId("t", "c", i) for i in ref_ints]
+    opt_misses, _ = simulate_belady(trace, capacity_pages=capacity)
+    # random eviction baseline
+    resident, misses = set(), 0
+    for pid in trace:
+        if pid in resident:
+            continue
+        misses += 1
+        if len(resident) >= capacity:
+            resident.discard(rnd.choice(sorted(resident, key=str)))
+        resident.add(pid)
+    assert opt_misses <= misses
+
+
+def test_belady_exact_small_case():
+    # classic: A B C A B C with capacity 2 -> OPT misses = 3 + 1 = 4? check
+    ids = ["A", "B", "C", "A", "B", "C"]
+    trace = [PageId("t", "c", ord(x)) for x in ids]
+    misses, _ = simulate_belady(trace, capacity_pages=2)
+    assert misses == 4  # A,B miss; C evicts B (A sooner); A hit; B miss; C hit
+
+
+# ---------------------------------------------------------------- ABM ------
+
+def test_abm_relevance_functions():
+    db = make_db(n_tuples=100_000)
+    pool = BufferPool(capacity_bytes=1 << 30)
+    abm = ABM(db, pool)
+    s1 = ScanState(ScanSpec("t", ("c0",), ((0, 100_000),)), db)
+    s2 = ScanState(ScanSpec("t", ("c0",), ((0, 40_000),)), db)
+    abm.register(s1, 0.0)
+    abm.register(s2, 0.0)
+    # chunk 0 interests both scans; chunk 4 only s1 -> load relevance higher
+    assert abm.load_relevance(("t", 0)) > abm.load_relevance(("t", 4))
+    # starved short query beats long non-starved on QueryRelevance
+    assert abm.query_relevance(s2, starved=True) > abm.query_relevance(s1, starved=False)
+    # UseRelevance prefers chunks fewer OTHERS want
+    assert abm.use_relevance(("t", 4), s1) > abm.use_relevance(("t", 0), s1)
+
+
+def test_abm_keep_vs_load_eviction_rule():
+    db = make_db(n_tuples=100_000, page_bytes=1 << 12)
+    # pool fits exactly one chunk's pages
+    t = db.tables["t"]
+    chunk_bytes = sum(p.size_bytes for p in t.chunk_pages(0, ("c0", "c1")))
+    pool = BufferPool(capacity_bytes=chunk_bytes)
+    abm = ABM(db, pool)
+    s1 = ScanState(ScanSpec("t", ("c0", "c1"), ((0, 100_000),)), db)
+    abm.register(s1, 0.0)
+    dec = abm.next_load(0.0, starved={s1.scan_id})
+    assert dec is not None
+    for p in dec.pages:
+        pool.admit(p)
+    # chunk 0 resident & still wanted by s1; next load must NOT evict it for
+    # an equally-relevant chunk (Keep >= Load -> denied) unless space exists
+    dec2 = abm.next_load(0.0, starved=set())
+    if dec2 is not None:
+        assert all(v.pid not in {p.pid for p in dec.pages} for v in dec2.evict)
