@@ -24,6 +24,7 @@ from repro.core.workload import (
 
 POLICIES = ["lru", "cscan", "pbm", "opt"]
 EXTENDED = ["mru", "pbm_lru", "attach"]
+ARRAY_POLICIES = ["lru", "pbm"]  # cscan/opt stay on the event engine
 
 DEFAULTS = dict(n_streams=8, queries=16, bandwidth=700e6, buffer_frac=0.4, seed=3)
 
@@ -102,19 +103,184 @@ def sweep(which: str, policies: List[str], scale: float = 1.0, seed: int = 3):
     return out
 
 
+def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 3):
+    """Array-backend (``repro.core.array_sim``) version of :func:`sweep`.
+
+    Emits rows with the same schema (policy / avg_stream_time_s / io_gb /
+    wall_s / sweep / point) for the LRU + PBM array policies.  One jitted
+    runner per (streams-config, policy) is reused across sweep points: the
+    capacity and bandwidth of each point are traced config scalars.
+    """
+    from repro.core.array_sim import build_spec, make_runner, run_workload_array
+
+    policies = policies or ARRAY_POLICIES
+    db = make_lineitem_db(scale_tuples=int(180_000_000 * scale))
+    ws = micro_accessed_bytes(db)
+    points = {
+        "buffer": [0.1, 0.2, 0.4, 0.6, 0.8, 1.0],
+        "bandwidth": [200e6, 400e6, 700e6, 1000e6, 1400e6, 2000e6],
+        "streams": [1, 2, 4, 8, 16, 32],
+    }[which]
+    time_slice = 0.1 * scale
+    out = []
+    spec_cache = {}
+    # validity envelope: the array model advances a scan only when ALL its
+    # column pages are resident (the event engine needs one page at a time
+    # in plan order), so a pool smaller than streams x columns + eviction
+    # batch cannot make progress and the point is skipped
+    import numpy as _np
+    for p in points:
+        kw = dict(DEFAULTS)
+        kw["seed"] = seed
+        if which == "buffer":
+            kw["buffer_frac"] = p
+        elif which == "bandwidth":
+            kw["bandwidth"] = p
+        else:
+            kw["n_streams"] = int(p)
+        fraction = 0.5 if which == "streams" else None
+        skey = (kw["n_streams"], kw["queries"], fraction, seed)
+        if skey not in spec_cache:
+            streams = micro_streams(db, n_streams=kw["n_streams"],
+                                    queries_per_stream=kw["queries"],
+                                    fraction=fraction, seed=seed)
+            spec = build_spec(db, streams)
+            runners = {
+                pol: make_runner(spec, bandwidth_ref=700e6,
+                                 time_slice=time_slice, static_policy=pol)
+                for pol in policies
+            }
+            spec_cache[skey] = (streams, spec, runners)
+        streams, spec, runners = spec_cache[skey]
+        cap = max(1 << 22, int(kw["buffer_frac"] * ws))
+        min_cap = (kw["n_streams"] * spec.n_cols + 24) * float(
+            _np.max(spec.page_size))
+        if cap < min_cap:
+            print(f"  micro[array]/{which} @ {p}: skipped (pool "
+                  f"{cap/1e6:.0f}MB below the array-model envelope "
+                  f"{min_cap/1e6:.0f}MB)", flush=True)
+            continue
+        rows = []
+        for pol in policies:
+            r = run_workload_array(
+                db, streams, pol, capacity_bytes=cap,
+                bandwidth=kw["bandwidth"], time_slice=time_slice,
+                spec=spec, runner=runners[pol],
+            )
+            rows.append({
+                "policy": pol,
+                "avg_stream_time_s": round(r.avg_stream_time, 3),
+                "io_gb": round(r.io_gb, 3),
+                "wall_s": round(r.wall_s, 2),
+                "sweep": which,
+                "point": p,
+                "backend": "array",
+            })
+        out.extend(rows)
+        label = f"{p:.0%}" if which == "buffer" else (
+            f"{p/1e6:.0f}MB/s" if which == "bandwidth" else f"{int(p)} streams")
+        summary = " ".join(
+            f"{r['policy']}={r['avg_stream_time_s']:.1f}s/{r['io_gb']:.1f}GB"
+            for r in rows
+        )
+        print(f"  micro[array]/{which} @ {label:10s} {summary}", flush=True)
+    return out
+
+
+def batched_buffer_race(scale: float = 1.0, seed: int = 3,
+                        fracs=None, policy: str = "pbm"):
+    """One vmapped array run over >=4 buffer points vs the same points run
+    sequentially on the event engine — the batched-substrate wall-clock
+    proof.  The batched runner uses the coarse 2-page step mode.
+    Returns (and the caller prints) a summary dict."""
+    import jax
+    import numpy as _np
+
+    from repro.core import EngineConfig, run_workload
+    from repro.core.array_sim import (
+        build_spec, make_config, make_runner, result_from_state, stack_configs,
+    )
+
+    db = make_lineitem_db(scale_tuples=int(180_000_000 * scale))
+    ws = micro_accessed_bytes(db)
+    streams = micro_streams(db, n_streams=8, queries_per_stream=16, seed=seed)
+    time_slice = 0.1 * scale
+    spec = build_spec(db, streams)
+    min_cap = (8 * spec.n_cols + 24) * float(_np.max(spec.page_size))
+    cand = list(fracs) if fracs is not None else \
+        [0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
+    # the validity envelope applies to explicit points too: a pool the
+    # array model cannot progress in would spin to max_time and poison
+    # the wall-clock comparison
+    fracs = [f for f in cand if max(1 << 22, int(f * ws)) >= min_cap][:4]
+    if len(fracs) < 4:  # tiny working set: synthesise points above min_cap
+        caps = [int(min_cap * x) for x in (1.2, 1.6, 2.0, 2.5)]
+        fracs = [round(c / ws, 3) for c in caps]
+    else:
+        caps = [max(1 << 22, int(f * ws)) for f in fracs]
+
+    t0 = time.time()
+    ev_rows = []
+    for cap in caps:
+        cfg = EngineConfig(bandwidth=700e6, buffer_bytes=cap,
+                           sample_interval=2.0, pbm_time_slice=time_slice)
+        ev_rows.append(run_workload(db, streams, policy, cfg))
+    event_wall = time.time() - t0
+
+    runner = make_runner(spec, bandwidth_ref=700e6, time_slice=time_slice,
+                         static_policy=policy, step_pages=2.0)
+    vrun = jax.jit(jax.vmap(runner))
+    cfgs = stack_configs([make_config(spec, cap, 700e6, policy) for cap in caps])
+    t0 = time.time()
+    states = jax.block_until_ready(vrun(cfgs))
+    array_cold = time.time() - t0
+    t0 = time.time()
+    states = jax.block_until_ready(vrun(cfgs))
+    array_wall = time.time() - t0
+
+    results = [
+        result_from_state(jax.tree.map(lambda x, i=i: x[i], states), policy)
+        for i in range(len(fracs))
+    ]
+    print(
+        f"  batched sweep [{policy}, {len(fracs)} buffer points]: "
+        f"vmapped array = {array_wall:.2f}s (cold {array_cold:.2f}s incl. "
+        f"compile) vs sequential event engine = {event_wall:.2f}s "
+        f"-> {'array WINS' if array_wall < event_wall else 'event wins'} "
+        f"({event_wall / max(array_wall, 1e-9):.2f}x)",
+        flush=True,
+    )
+    return {
+        "policy": policy,
+        "fracs": list(fracs),
+        "array_vmapped_wall_s": round(array_wall, 3),
+        "array_cold_wall_s": round(array_cold, 3),
+        "event_sequential_wall_s": round(event_wall, 3),
+        "speedup": round(event_wall / max(array_wall, 1e-9), 3),
+        "array_avg_stream_time_s": [round(r.avg_stream_time, 3) for r in results],
+        "event_avg_stream_time_s": [round(r.avg_stream_time, 3) for r in ev_rows],
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sweep", choices=["buffer", "bandwidth", "streams", "all"],
                     default="all")
     ap.add_argument("--scale", type=float, default=1.0)
     ap.add_argument("--extended", action="store_true")
+    ap.add_argument("--backend", choices=["event", "array"], default="event")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    policies = POLICIES + (EXTENDED if args.extended else [])
     sweeps = ["buffer", "bandwidth", "streams"] if args.sweep == "all" else [args.sweep]
     rows = []
-    for s in sweeps:
-        rows.extend(sweep(s, policies, scale=args.scale))
+    if args.backend == "array":
+        for s in sweeps:
+            rows.extend(sweep_array(s, ARRAY_POLICIES, scale=args.scale))
+        batched_buffer_race(scale=args.scale)
+    else:
+        policies = POLICIES + (EXTENDED if args.extended else [])
+        for s in sweeps:
+            rows.extend(sweep(s, policies, scale=args.scale))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=2)

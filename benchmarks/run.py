@@ -7,6 +7,14 @@ roofline term per step and derived the roofline fraction.
 
   PYTHONPATH=src:. python -m benchmarks.run            # quick (scaled) pass
   PYTHONPATH=src:. python -m benchmarks.run --full     # paper-scale sweeps
+  PYTHONPATH=src:. python -m benchmarks.run --backend=array   # array-native
+  PYTHONPATH=src:. python -m benchmarks.run --smoke    # CI smoke (tiny scale)
+
+``--backend=array`` runs the microbenchmark sweeps on the vmap-able array
+substrate (``repro.core.array_sim``: LRU + PBM; CScan/OPT stay on the
+event engine) with the same CSV/JSON row schema, and measures one batched
+(vmapped) buffer sweep against sequential event-engine runs of the same
+points.
 """
 
 from __future__ import annotations
@@ -33,18 +41,36 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="paper-scale sweeps (minutes); default is a scaled "
                          "quick pass")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: quick scale, buffer sweep only (the "
+                         "micro working set must stay large enough that "
+                         "the 10%% buffer point has a sane pool)")
+    ap.add_argument("--backend", choices=["event", "array"], default="event",
+                    help="microbenchmark backend: dict/heapq event engine "
+                         "or the vmap-able array substrate")
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args()
     os.makedirs(RESULTS_DIR, exist_ok=True)
     scale = 1.0 if args.full else 0.25
+    sweeps = ("buffer",) if args.smoke else ("buffer", "bandwidth", "streams")
 
     from benchmarks import microbench, tpch, sharing, serving_bench, data_bench
 
     print("# === microbenchmark (paper Figs 11-13) ===", file=sys.stderr)
     rows = []
-    for s in ("buffer", "bandwidth", "streams"):
-        rows.extend(microbench.sweep(s, microbench.POLICIES, scale=scale))
-    with open(os.path.join(RESULTS_DIR, "micro.json"), "w") as f:
+    if args.backend == "array":
+        print("# backend=array: LRU/PBM on repro.core.array_sim "
+              "(CScan/OPT remain event-engine-only)", file=sys.stderr)
+        for s in sweeps:
+            rows.extend(microbench.sweep_array(
+                s, microbench.ARRAY_POLICIES, scale=scale))
+    else:
+        for s in sweeps:
+            rows.extend(microbench.sweep(s, microbench.POLICIES, scale=scale))
+    # per-backend filename: CI runs both backends back to back and uploads
+    # everything, so neither run may clobber the other's rows
+    micro_name = "micro_array.json" if args.backend == "array" else "micro.json"
+    with open(os.path.join(RESULTS_DIR, micro_name), "w") as f:
         json.dump(rows, f, indent=2)
     for r in rows:
         _csv(
@@ -52,10 +78,18 @@ def main() -> None:
             r["avg_stream_time_s"] * 1e6,
             r["io_gb"],
         )
+    if args.backend == "array":
+        print("# === batched (vmapped) sweep vs sequential event engine ===",
+              file=sys.stderr)
+        race = microbench.batched_buffer_race(scale=scale)
+        with open(os.path.join(RESULTS_DIR, "batched_race.json"), "w") as f:
+            json.dump(race, f, indent=2)
+        _csv("micro_batched_sweep_pbm",
+             race["array_vmapped_wall_s"] * 1e6, race["speedup"])
 
     print("# === TPC-H throughput (paper Figs 14-16) ===", file=sys.stderr)
     rows = []
-    for s in ("buffer", "bandwidth", "streams"):
+    for s in sweeps:
         rows.extend(tpch.sweep(s, tpch.POLICIES, scale=scale))
     with open(os.path.join(RESULTS_DIR, "tpch.json"), "w") as f:
         json.dump(rows, f, indent=2)

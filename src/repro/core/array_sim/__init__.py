@@ -1,0 +1,47 @@
+"""Array-native batched simulation core (vmap-able PBM timeline).
+
+Re-implements the buffer pool + scan machinery of ``repro.core.engine``
+as fixed-shape JAX arrays with a pure ``step(state, cfg) -> state``:
+one ``jax.vmap`` call batches an entire sweep axis, and the PBM bucketed
+timeline runs as a Pallas kernel on TPU (jnp oracle elsewhere).
+
+Kept separate from ``repro.core.__init__`` so the dict-based engine stays
+importable without pulling in JAX.
+"""
+
+from .spec import SimSpec, build_spec
+from .sim import (
+    POLICY_IDS,
+    ArrayResult,
+    ArraySimConfig,
+    SimState,
+    init_state,
+    make_config,
+    make_runner,
+    make_step,
+    result_from_state,
+    run_workload_array,
+    stack_configs,
+)
+from .policies import next_consumption, target_buckets, time_to_bucket
+from .validate import cross_validate
+
+__all__ = [
+    "ArrayResult",
+    "ArraySimConfig",
+    "POLICY_IDS",
+    "SimSpec",
+    "SimState",
+    "build_spec",
+    "cross_validate",
+    "init_state",
+    "make_config",
+    "make_runner",
+    "make_step",
+    "next_consumption",
+    "result_from_state",
+    "run_workload_array",
+    "stack_configs",
+    "target_buckets",
+    "time_to_bucket",
+]

@@ -1,0 +1,82 @@
+"""Array formulations of the LRU and PBM eviction policies.
+
+These mirror ``repro.core.policies.{lru,pbm}`` but operate on dense
+per-page arrays so they can run inside a jitted/vmapped simulation step:
+
+* :func:`time_to_bucket` — the O(1) ``TimeToBucketNumber`` of paper
+  Fig. 10, vectorised over a whole page array.
+* :func:`next_consumption` — ``PageNextConsumption`` (paper Fig. 9)
+  vectorised over the whole page array instead of per-page dict walks.
+* :func:`target_buckets` — where every page *would* go if (re)pushed now;
+  used for newly loaded pages, request-set transitions, and the
+  spill-recalculation of the timeline shift.
+
+The timeline shift + batched evict selection live in
+``repro.kernels.pbm_timeline`` (Pallas) with a jnp oracle in
+``repro.kernels.ref`` — this module only computes the inputs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# "no interest" sentinel: a finite big value, not inf — XLA:CPU fuses
+# float arithmetic far better than inf/pred-heavy broadcasts
+BIG = jnp.float32(1e30)
+BIG_CUT = 1e29
+
+
+def time_to_bucket(eta, time_slice, n_groups, m):
+    """Vectorised TimeToBucketNumber: bucket index for each eta (seconds).
+
+    Matches ``PBMPolicy.time_to_bucket`` elementwise: group ``g`` covers
+    slice offsets ``[m*(2^g - 1), m*(2^(g+1) - 1))`` with bucket width
+    ``2^g`` slices.  ``eta=inf`` maps to the last bucket (callers decide
+    not-requested separately).
+    """
+    nb = n_groups * m
+    s = jnp.maximum(eta, 0.0) / time_slice
+    g = jnp.floor(jnp.log2(s / m + 1.0)).astype(jnp.int32)
+    g = jnp.clip(g, 0, n_groups - 1)
+    glen = jnp.left_shift(jnp.int32(1), g)
+    start = m * (glen - 1)
+    width = glen.astype(jnp.float32)
+    idx = jnp.floor((s - start.astype(jnp.float32)) / width).astype(jnp.int32)
+    b = jnp.clip(g * m + idx, 0, nb - 1)
+    return jnp.where(eta <= 0.0, 0, b).astype(jnp.int32)
+
+
+def next_consumption(page_first, page_last, page_col, cols_cur, cur_abs,
+                     scan_end, speed, active):
+    """``PageNextConsumption`` over the whole page array: min over streams
+    of estimated seconds until the page's consumption, :data:`BIG` where no
+    registered scan wants the page.
+
+    Unrolled over streams (S is small and static): 1-D elementwise ops per
+    stream fuse to a single fast loop on CPU, where the equivalent (S, P)
+    broadcast compiles to a pathologically slow predicate fusion.
+    """
+    S = cur_abs.shape[0]
+    colmask_sp = cols_cur[:, page_col]           # one (S, P) gather
+    eta = jnp.full(page_first.shape, BIG)
+    for s in range(S):
+        interest = (
+            colmask_sp[s]                        # scan touches the column
+            & (page_last > cur_abs[s])           # not yet fully consumed
+            & (page_first < scan_end[s])         # inside the scanned range
+            & active[s]
+        )
+        e = jnp.maximum(page_first - cur_abs[s], 0.0) / jnp.maximum(
+            speed[s], 1e-6
+        )
+        eta = jnp.minimum(eta, jnp.where(interest, e, BIG))
+    return eta
+
+
+def target_buckets(eta, time_slice, n_groups, m, page_valid):
+    """Bucket every page would get if pushed now: ``time_to_bucket`` for
+    requested pages, the not-requested sentinel (== nb) otherwise."""
+    nb = n_groups * m
+    requested = (eta < BIG_CUT) & page_valid
+    b = time_to_bucket(jnp.where(requested, eta, 0.0), time_slice, n_groups, m)
+    return jnp.where(requested, b, nb).astype(jnp.int32)

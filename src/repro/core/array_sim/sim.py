@@ -1,0 +1,550 @@
+"""Array-native batched simulation of concurrent scans over a buffer pool.
+
+The event engine (``repro.core.engine``) replays the paper's machine one
+heapq event at a time in Python.  This module re-expresses the same system
+as a **pure, fixed-shape array program**:
+
+* per-page state (residency, LRU clock, PBM bucket, FIFO request stamp)
+  and per-stream state (query index, cursor, speed estimate) live in dense
+  JAX arrays (:class:`SimState`);
+* a pure ``step(state, cfg) -> state`` advances the whole machine by one
+  page-transfer time ``dt`` — scans consume tuples while their pages are
+  resident and block exactly at page boundaries whose successor is absent;
+  a bandwidth-budgeted I/O server pops the request FIFO; the plugged
+  policy (array LRU or array PBM) picks batched eviction victims;
+* steps come in two flavours on the paper's own cadence: *within* a PBM
+  time slice the bucketed timeline is static (cheap step: consume, load,
+  evict), and once per ``time_slice`` a *refresh* step recomputes every
+  page's estimated next consumption, re-buckets transitions, and shifts
+  the timeline — ``RefreshRequestedBuckets`` as one vector op;
+* everything is ``jax.jit``- and ``jax.vmap``-compatible, so an entire
+  sweep axis (buffer sizes x bandwidths x policies) runs as ONE batched
+  computation instead of N serial Python event loops.
+
+The PBM hot path — timeline shift + spill + batched Belady-rule eviction
+— is dispatched through ``repro.kernels.ops.pbm_timeline_step``: a Pallas
+kernel on TPU, its jnp oracle elsewhere.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .policies import BIG_CUT, next_consumption, target_buckets
+from .spec import SimSpec, build_spec
+
+_EWMA = 0.3           # speed smoothing; engine parity (ScanState ewma=0.3)
+_REQ_NONE = 1 << 24   # FIFO stamp sentinel: page not currently requested
+_LOAD_MAX = 6         # load grants per step (credit caps at ~5 pages)
+
+
+class ArraySimConfig(NamedTuple):
+    """Traced runtime knobs: a batch of configs (one per sweep point) can
+    be stacked leaf-wise and vmapped over."""
+
+    capacity_bytes: jax.Array   # f32 buffer-pool capacity
+    bandwidth: jax.Array        # f32 bytes/sec of the I/O server
+    policy: jax.Array           # i32: 0 = LRU, 1 = PBM
+    max_time: jax.Array         # f32 livelock guard
+
+
+class SimState(NamedTuple):
+    # ---- per-page (P,) ---------------------------------------------------
+    resident: jax.Array       # bool
+    last_used: jax.Array      # f32 LRU clock
+    bucket: jax.Array         # i32 PBM timeline position (nb == not-requested)
+    req_step: jax.Array       # i32 FIFO stamp: step the page was first wanted
+    # ---- per-stream (S,) -------------------------------------------------
+    qidx: jax.Array           # i32 current query (== n_q when stream done)
+    pos: jax.Array            # f32 tuples consumed within current query
+    speed: jax.Array          # f32 EWMA tuples/sec
+    stream_done_t: jax.Array  # f32 finish time, -1 while running
+    # ---- scalars ---------------------------------------------------------
+    t: jax.Array              # f32 sim clock
+    steps: jax.Array          # i32
+    time_passed: jax.Array    # i32 PBM slices elapsed
+    io_credit: jax.Array      # f32 banked I/O bytes (partial in-flight load)
+    io_bytes: jax.Array       # f32 lifetime loaded bytes (paper I/O volume)
+    loads: jax.Array          # i32 lifetime page loads
+
+
+@dataclass
+class ArrayResult:
+    """Mirror of ``EngineResult`` for the array backend rows."""
+
+    policy: str
+    stream_times: List[float]
+    total_io_bytes: float
+    total_loads: int
+    sim_time: float
+    steps: int
+    wall_s: float = 0.0
+    extras: dict = field(default_factory=dict)
+
+    @property
+    def avg_stream_time(self) -> float:
+        return sum(self.stream_times) / max(1, len(self.stream_times))
+
+    @property
+    def io_gb(self) -> float:
+        return self.total_io_bytes / 1e9
+
+
+POLICY_IDS = {"lru": 0, "pbm": 1}
+_POLICY_NAMES = {v: k for k, v in POLICY_IDS.items()}
+
+
+class _View(NamedTuple):
+    """Derived per-stream view of the current query + cursor.  Carried
+    alongside :class:`SimState` so each step computes it once (this step's
+    post-advance view is the next step's pre-advance view)."""
+
+    active: jax.Array   # (S,) bool
+    length: jax.Array   # (S,) f32
+    rate: jax.Array     # (S,) f32
+    cols: jax.Array     # (S, C) bool
+    cur: jax.Array      # (S,) f32 absolute cursor
+    end: jax.Array      # (S,) f32 absolute scan end
+    local: jax.Array    # (S, C) i32 page index within column
+    pidx: jax.Array     # (S, C) i32 global page id under the cursor
+    need: jax.Array     # (S, C) bool
+
+
+def make_config(
+    spec: SimSpec,
+    capacity_bytes: float,
+    bandwidth: float = 700e6,
+    policy: str | int = "pbm",
+    max_time: float = 3e5,
+) -> ArraySimConfig:
+    pid = POLICY_IDS[policy] if isinstance(policy, str) else int(policy)
+    return ArraySimConfig(
+        capacity_bytes=jnp.float32(capacity_bytes),
+        bandwidth=jnp.float32(bandwidth),
+        policy=jnp.int32(pid),
+        max_time=jnp.float32(max_time),
+    )
+
+
+def stack_configs(cfgs: Sequence[ArraySimConfig]) -> ArraySimConfig:
+    """Stack N configs leaf-wise into one batched config for vmap."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *cfgs)
+
+
+def init_state(spec: SimSpec) -> SimState:
+    P, S = spec.n_pages, spec.n_streams
+    n_q = jnp.asarray(spec.n_q)
+    return SimState(
+        resident=jnp.zeros(P, bool),
+        last_used=jnp.full(P, -1e9, jnp.float32),
+        bucket=jnp.full(P, spec.not_requested, jnp.int32),
+        req_step=jnp.full(P, _REQ_NONE, jnp.int32),
+        qidx=jnp.zeros(S, jnp.int32),
+        pos=jnp.zeros(S, jnp.float32),
+        speed=jnp.asarray(spec.q_rate[:, 0]),
+        stream_done_t=jnp.where(n_q > 0, -1.0, 0.0).astype(jnp.float32),
+        t=jnp.float32(0.0),
+        steps=jnp.int32(0),
+        time_passed=jnp.int32(0),
+        io_credit=jnp.float32(0.0),
+        io_bytes=jnp.float32(0.0),
+        loads=jnp.int32(0),
+    )
+
+
+def make_step(spec: SimSpec, dt: float, time_slice: float,
+              prefetch_pages: int = 8, refresh: bool = False,
+              static_policy: Optional[str] = None):
+    """Build the pure ``step(state, cfg) -> state``.
+
+    ``refresh=False`` is the cheap within-slice step: the PBM timeline is
+    static except for just-loaded pages (bucketed individually) and pages
+    entering consumption (bucket 0).  ``refresh=True`` is the once-per-
+    ``time_slice`` boundary step that recomputes every page's next
+    consumption, demotes no-longer-requested pages, and shifts the
+    timeline one slice (spilled buckets re-bucket at the fresh estimate).
+    """
+    from repro.kernels import ops as kops
+
+    P, S, Q, C = spec.n_pages, spec.n_streams, spec.n_queries, spec.n_cols
+    NR = spec.not_requested
+    nb, m = spec.nb, spec.buckets_per_group
+    K = int(prefetch_pages)
+    # deepest per-column readahead actually reachable: the scatter that
+    # publishes request slots walks K_LOOP+1 entries per (stream, column),
+    # so a policy-specialised step (PBM readahead depth is 1) is cheaper
+    K_LOOP = min(K, 1 if static_policy == "pbm" else 4)
+    dt = jnp.float32(dt)
+    time_slice_f = jnp.float32(time_slice)
+
+    page_size = jnp.asarray(spec.page_size)
+    page_first = jnp.asarray(spec.page_first)
+    page_last = jnp.asarray(spec.page_last)
+    page_col = jnp.asarray(spec.page_col)
+    page_valid = jnp.asarray(spec.page_valid)
+    col_start = jnp.asarray(spec.col_start)
+    col_npages = jnp.asarray(spec.col_npages)
+    col_tpp = jnp.asarray(spec.col_tpp)
+    q_start = jnp.asarray(spec.q_start)
+    q_len = jnp.asarray(spec.q_len)
+    q_rate = jnp.asarray(spec.q_rate)
+    q_cols = jnp.asarray(spec.q_cols)
+    n_q = jnp.asarray(spec.n_q)
+    s_idx = jnp.arange(S)
+    max_page = jnp.float32(float(np.max(spec.page_size)))
+    INF = jnp.float32(np.inf)
+
+    def query_view(qidx, pos) -> _View:
+        """Gather the per-stream view of the current query + cursor."""
+        qi = jnp.clip(qidx, 0, Q - 1)
+        active = qidx < n_q
+        start = q_start[s_idx, qi]
+        length = q_len[s_idx, qi]
+        rate = q_rate[s_idx, qi]
+        cols = q_cols[s_idx, qi]                       # (S, C)
+        cur = start + pos
+        end = start + length
+        local = jnp.floor(cur[:, None] / col_tpp[None, :]).astype(jnp.int32)
+        local = jnp.clip(local, 0, col_npages[None, :] - 1)
+        # page boundaries are exact ints but tpp is fractional: correct the
+        # division so cur lands in [first, last) of its page (a cursor at a
+        # boundary must map to the NEXT page or it stalls with adv_lim=0)
+        pidx0 = col_start[None, :] + local
+        local = local + (cur[:, None] >= page_last[pidx0]).astype(jnp.int32)
+        local = local - (cur[:, None] < page_first[pidx0]).astype(jnp.int32)
+        local = jnp.clip(local, 0, col_npages[None, :] - 1)
+        pidx = col_start[None, :] + local              # (S, C)
+        need = active[:, None] & cols
+        return _View(active, length, rate, cols, cur, end, local, pidx, need)
+
+    def step(carry, cfg: ArraySimConfig):
+        state, view = carry
+        t2 = state.t + dt
+
+        # ================= CPU: consume while resident ====================
+        (active, length, rate, _cols, cur, end, local, pidx,
+         need) = view
+        res_need = state.resident[pidx]
+        blocked = jnp.any(need & ~res_need, axis=1)
+        runnable = active & ~blocked
+
+        # block exactly at the boundary of a page whose successor is absent
+        nxt_local = jnp.minimum(local + 1, col_npages[None, :] - 1)
+        nxt_exists = (local + 1 < col_npages[None, :]) & (
+            page_first[col_start[None, :] + nxt_local] < end[:, None]
+        )
+        nxt_missing = nxt_exists & ~state.resident[col_start[None, :] + nxt_local]
+        boundary = page_last[pidx] - cur[:, None]
+        lim = jnp.where(need & nxt_missing, jnp.maximum(boundary, 0.0), INF)
+        adv_lim = jnp.min(lim, axis=1)
+        remaining = length - state.pos
+        adv = jnp.where(
+            runnable, jnp.minimum(jnp.minimum(rate * dt, remaining), adv_lim), 0.0
+        )
+        adv = jnp.maximum(adv, 0.0)
+
+        margin = jnp.maximum(0.5, 3e-5 * length)
+        finished = runnable & (remaining - adv <= margin)
+        qidx2 = state.qidx + finished.astype(jnp.int32)
+        pos2 = jnp.where(finished, 0.0, state.pos + adv)
+        newly_done = (qidx2 >= n_q) & (state.stream_done_t < 0)
+        stream_done_t2 = jnp.where(newly_done, t2, state.stream_done_t)
+
+        inst = adv / dt
+        speed1 = jnp.where(
+            active, _EWMA * inst + (1 - _EWMA) * state.speed, state.speed
+        )
+        next_rate = q_rate[s_idx, jnp.clip(qidx2, 0, Q - 1)]
+        speed2 = jnp.where(finished, next_rate, speed1)  # fresh scan: reset
+
+        # touch consumed pages (LRU clock)
+        touch = need & runnable[:, None]
+        last_used2 = state.last_used.at[pidx].max(jnp.where(touch, t2, -INF))
+
+        # ================= post-advance view (I/O demand) =================
+        view2 = query_view(qidx2, pos2)
+        (active2, _l2, _r2, cols2, cur2, end2, local2, pidx2,
+         need2) = view2
+        res2 = state.resident[pidx2]
+        demand = need2 & ~res2
+
+        # readahead budget: K plan pages per scan, split across its columns
+        # in proportion to page density (the engine's next-K-plan-pages)
+        inv_tpp = 1.0 / col_tpp[None, :]
+        dens = jnp.sum(jnp.where(need2, inv_tpp, 0.0), axis=1, keepdims=True)
+        depth_dens = jnp.maximum(
+            jnp.round(K * inv_tpp / jnp.maximum(dens, 1e-30)), 1.0
+        )
+        # calibrated against the event engine: LRU tracks best with the
+        # density split of the plan-order readahead; PBM with a shallow
+        # uniform depth (deep readahead lands in far-future buckets and
+        # thrashes at small pools more than the engine's request queue does)
+        if static_policy is None:
+            pol_depth = jnp.where(cfg.policy == 1, 1.0, depth_dens)
+        elif static_policy == "pbm":
+            pol_depth = 1.0
+        else:
+            pol_depth = depth_dens
+        depth = jnp.where(need2, pol_depth, 0.0).astype(jnp.int32)  # (S, C)
+        # one fused scatter for demand (k=0) + readahead (k=1..K_LOOP);
+        # per-column depth never exceeds ~K/2 on multi-column scans, so the
+        # scatter walks K_LOOP+1 slots instead of K+1
+        ks = jnp.arange(K_LOOP + 1)                    # (K_LOOP+1,)
+        pf_local = local2[:, :, None] + ks[None, None, :]
+        ok = (pf_local < col_npages[None, :, None]) & need2[:, :, None]
+        ok &= (ks[None, None, :] <= depth[:, :, None])
+        pf_pidx = col_start[None, :, None] + jnp.minimum(
+            pf_local, col_npages[None, :, None] - 1
+        )
+        ok &= page_first[pf_pidx] < end2[:, None, None]
+        kb = jnp.where(ks == 0, 31, jnp.clip(K_LOOP + 1 - ks, 1, 30))
+        okd = ok.at[:, :, 0].set(demand)               # k=0 slot: demand only
+        bonus = jnp.full(P, -1, jnp.int32).at[pf_pidx].max(
+            jnp.where(okd, kb[None, None, :], -1)
+        )
+        wanted = (bonus >= 0) & ~state.resident & page_valid
+        # FIFO service order, array-form: every page keeps the step at which
+        # it was first requested (demand or readahead) and the I/O server
+        # grants oldest requests first — the engine's request queue without
+        # the queue.  Stamps clear when the page loads or loses all waiters.
+        req_step2 = jnp.where(
+            wanted, jnp.minimum(state.req_step, state.steps + 1), _REQ_NONE
+        )
+        # int key (f32 would round away the bonus): older request -> larger
+        load_key = jnp.where(wanted, (_REQ_NONE - req_step2) * 32 + bonus, -1)
+
+        # ================= I/O server: budgeted admission =================
+        used = jnp.sum(page_size * state.resident)
+        free = cfg.capacity_bytes - used
+        # engine parity: pages are pinned only while a scan actually runs a
+        # CPU burst over them — a blocked scan pins nothing (otherwise a
+        # pool smaller than the union of current column sets livelocks)
+        blocked2 = jnp.any(need2 & ~res2, axis=1)
+        pin = jnp.zeros(P, jnp.int32).at[pidx2].max(
+            (need2 & res2 & ~blocked2[:, None]).astype(jnp.int32)
+        )
+        evictable = state.resident & (pin == 0) & page_valid
+        evictable_bytes = jnp.sum(page_size * evictable)
+        headroom = free + evictable_bytes
+        credit = state.io_credit + cfg.bandwidth * dt
+
+        # the server grants at most ~credit bytes (a handful of pages) per
+        # step: pop the FIFO head a few times instead of sorting anything.
+        # Head-of-line semantics: the first page that does not fit blocks
+        # the rest of the queue, like the engine's serial server.
+        kcur = load_key
+        taken = jnp.float32(0.0)
+        open_ = jnp.bool_(True)
+        budget = jnp.minimum(credit, headroom)
+        arange_p = jnp.arange(P)
+        hit = jnp.zeros(P, bool)
+        cand = []
+        cand_ok = []
+        for _ in range(_LOAD_MAX):
+            j = jnp.argmax(kcur)
+            ok_j = open_ & (kcur[j] >= 0) & (taken + page_size[j] <= budget)
+            open_ = ok_j
+            is_j = arange_p == j       # arithmetic mask: fuses, scatter won't
+            hit = hit | (is_j & ok_j)
+            taken = taken + jnp.where(ok_j, page_size[j], 0.0)
+            kcur = jnp.where(is_j, -1, kcur)
+            cand.append(j)
+            cand_ok.append(ok_j)
+        load_mask = hit
+        cand = jnp.stack(cand)                         # (LOAD_MAX,)
+        cand_ok = jnp.stack(cand_ok)
+        load_bytes = taken
+        n_load = jnp.sum(cand_ok)
+
+        leftover = credit - load_bytes
+        starved_io = jnp.sum(wanted & ~load_mask) > 0
+        io_credit2 = jnp.where(
+            starved_io, jnp.minimum(leftover, 4 * max_page), 0.0
+        )
+
+        # ================= PBM bookkeeping ================================
+        if refresh:
+            # slice boundary: full PageNextConsumption recompute, bucket
+            # transitions, and one timeline shift with spill re-bucketing
+            eta = next_consumption(page_first, page_last, page_col, cols2,
+                                   cur2, end2, speed2, active2)
+            b_target = target_buckets(eta, time_slice_f, spec.n_groups, m,
+                                      page_valid)
+            interested = (eta < BIG_CUT) & page_valid
+            assign = (
+                load_mask | ((state.bucket == NR) & interested)
+                | (b_target == 0)
+            )
+            bucket_pre = jnp.where(
+                ~interested, NR, jnp.where(assign, b_target, state.bucket)
+            ).astype(jnp.int32)
+            k_shift = jnp.int32(1)
+            time_passed2 = state.time_passed + 1
+        else:
+            # within a slice the timeline is static: bucket just-loaded
+            # pages individually and mark pages entering consumption
+            eta_c = next_consumption(
+                page_first[cand], page_last[cand], page_col[cand],
+                cols2, cur2, end2, speed2, active2,
+            )
+            b_c = target_buckets(
+                eta_c, time_slice_f, spec.n_groups, m,
+                jnp.ones(cand.shape[0], bool),
+            )
+            bucket_pre = state.bucket.at[cand].set(
+                jnp.where(cand_ok, b_c, state.bucket[cand])
+            )
+            # pages under an active cursor are imminent: bucket 0 (the dict
+            # impl pushes them with eta 0 on every consume event)
+            bucket_pre = bucket_pre.at[pidx2].min(
+                jnp.where(need2 & res2, 0, NR + 1)
+            )
+            bucket_pre = jnp.minimum(bucket_pre, NR)
+            b_target = bucket_pre                      # no spill when k=0
+            k_shift = jnp.int32(0)
+            time_passed2 = state.time_passed
+
+        # engine parity: evictions are amortised in batches (>= 16 pages),
+        # so a triggered eviction frees up to a whole batch, not one page
+        batch = jnp.minimum(16 * max_page, cfg.capacity_bytes)
+        need_free = jnp.where(
+            load_bytes > free,
+            jnp.minimum(jnp.maximum(load_bytes, batch) - free,
+                        evictable_bytes),
+            0.0,
+        )
+        bucket_out, evict = kops.pbm_timeline_step(
+            bucket_pre, b_target, last_used2, page_size, evictable,
+            state.time_passed, k_shift, need_free, cfg.policy, t2, nb=nb, m=m,
+        )
+
+        resident2 = (state.resident & ~evict) | load_mask
+        last_used3 = jnp.where(load_mask, t2, last_used2)
+        req_step3 = jnp.where(load_mask, _REQ_NONE, req_step2)
+
+        new_state = SimState(
+            resident=resident2,
+            last_used=last_used3,
+            bucket=bucket_out,
+            req_step=req_step3,
+            qidx=qidx2,
+            pos=pos2,
+            speed=speed2,
+            stream_done_t=stream_done_t2,
+            t=t2,
+            steps=state.steps + 1,
+            time_passed=time_passed2,
+            io_credit=io_credit2,
+            io_bytes=state.io_bytes + load_bytes,
+            loads=state.loads + n_load,
+        )
+        return new_state, view2
+
+    step.query_view = query_view
+    return step
+
+
+def make_runner(
+    spec: SimSpec,
+    bandwidth_ref: float = 700e6,
+    time_slice: float = 0.1,
+    prefetch_pages: int = 8,
+    max_slices: int = 80_000,
+    static_policy: Optional[str] = None,
+    step_pages: float = 1.0,
+):
+    """Jitted ``run(cfg) -> SimState``: steps until every stream finishes.
+
+    The step length is ``step_pages`` page-transfer times at
+    ``bandwidth_ref`` (other bandwidths flow through the per-step byte
+    credit), and the PBM timeline refreshes structurally every
+    ``time_slice`` — the refresh cadence is compiled into the loop nest
+    instead of branching per step.  ``step_pages > 1`` is the coarse fast
+    mode for batched sweeps: ~2x fewer steps for a few % fidelity.
+    ``static_policy`` specialises the compiled step for one policy
+    (smaller readahead scatter for PBM); leave ``None`` to vmap over the
+    policy axis too.
+
+    vmap-ready: ``jax.vmap(make_runner(spec))`` over a stacked config runs
+    a whole sweep axis in one call.
+    """
+    dt = float(step_pages) * float(np.max(spec.page_size)) / float(bandwidth_ref)
+    n_inner = max(1, int(round(time_slice / dt)))
+    cheap = make_step(spec, dt, time_slice, prefetch_pages, refresh=False,
+                      static_policy=static_policy)
+    full = make_step(spec, dt, time_slice, prefetch_pages, refresh=True,
+                     static_policy=static_policy)
+
+    def run(cfg: ArraySimConfig) -> SimState:
+        state = init_state(spec)
+        carry = (state, cheap.query_view(state.qidx, state.pos))
+
+        def slice_body(c):
+            c = jax.lax.fori_loop(
+                0, n_inner - 1, lambda i, s: cheap(s, cfg), c
+            )
+            return full(c, cfg)
+
+        def cond(c):
+            st = c[0]
+            return (
+                jnp.any(st.stream_done_t < 0)
+                & (st.t < cfg.max_time)
+                & (st.time_passed < max_slices)
+            )
+
+        return jax.lax.while_loop(cond, slice_body, carry)[0]
+
+    return jax.jit(run)
+
+
+def result_from_state(state: SimState, policy, sim_wall: float = 0.0,
+                      ) -> ArrayResult:
+    """Convert a finished (device) state into an :class:`ArrayResult`."""
+    done_t = np.asarray(state.stream_done_t, np.float64)
+    t_end = float(state.t)
+    stream_times = [d if d >= 0 else t_end for d in done_t]
+    name = _POLICY_NAMES.get(int(policy), str(policy)) \
+        if not isinstance(policy, str) else policy
+    return ArrayResult(
+        policy=name,
+        stream_times=stream_times,
+        total_io_bytes=float(state.io_bytes),
+        total_loads=int(state.loads),
+        sim_time=t_end,
+        steps=int(state.steps),
+        wall_s=sim_wall,
+    )
+
+
+def run_workload_array(
+    db,
+    streams,
+    policy_name: str,
+    *,
+    capacity_bytes: float,
+    bandwidth: float = 700e6,
+    time_slice: float = 0.1,
+    prefetch_pages: int = 8,
+    spec: Optional[SimSpec] = None,
+    runner=None,
+) -> ArrayResult:
+    """Array-backend counterpart of ``repro.core.run_workload`` for the
+    LRU / PBM policies (CScan and OPT stay on the event engine)."""
+    import time
+
+    if spec is None:
+        spec = build_spec(db, streams)
+    if runner is None:
+        runner = make_runner(spec, bandwidth_ref=bandwidth,
+                             time_slice=time_slice,
+                             prefetch_pages=prefetch_pages)
+    cfg = make_config(spec, capacity_bytes, bandwidth, policy_name)
+    t0 = time.time()
+    state = jax.block_until_ready(runner(cfg))
+    return result_from_state(state, policy_name, sim_wall=time.time() - t0)

@@ -1,0 +1,157 @@
+"""Static, fixed-shape array description of a scan workload.
+
+The event engine walks Python dicts of :class:`~repro.core.pages.Page`
+objects; the array backend flattens the same storage model into dense
+arrays once, up front, so the simulation step is pure array math:
+
+* **pages** — one slot per physical page of the table, padded to a
+  multiple of 128 (``page_valid`` masks the padding).  Per-page constants:
+  byte size, covered tuple range, owning column.
+* **columns** — tuples-per-page and the page-id offset of each column,
+  which turn a cursor position into a page index with one divide
+  (the array analogue of :meth:`Column.pages_for_range`).
+* **streams** — each stream's queries as ``(start, length, rate, column
+  mask)`` rows, padded to the longest stream.
+
+Only single-table, single-range scans are supported — exactly the shape of
+the paper's microbenchmark (Figs 11-13).  TPC-H multi-scan queries stay on
+the event engine.
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence
+
+import numpy as np
+
+from ..pages import Database
+from ..scans import ScanSpec
+
+PAGE_PAD = 128
+
+
+class SimSpec(NamedTuple):
+    """Immutable workload description consumed by ``array_sim.sim``.
+
+    Array fields are plain numpy; they are closed over by the jitted step
+    function and become on-device constants.
+    """
+
+    # ---- static dims -----------------------------------------------------
+    n_pages: int          # P (padded)
+    n_streams: int        # S
+    n_queries: int        # Q (padded per-stream query count)
+    n_cols: int           # C
+    # ---- PBM bucket geometry (paper Fig. 10) -----------------------------
+    n_groups: int
+    buckets_per_group: int
+    # ---- per-page constants (P,) -----------------------------------------
+    page_size: np.ndarray     # f32 bytes
+    page_first: np.ndarray    # f32 first tuple (absolute)
+    page_last: np.ndarray     # f32 last tuple, exclusive
+    page_col: np.ndarray      # i32 owning column
+    page_valid: np.ndarray    # bool
+    # ---- per-column constants (C,) ---------------------------------------
+    col_start: np.ndarray     # i32 page-id offset of the column
+    col_npages: np.ndarray    # i32
+    col_tpp: np.ndarray       # f32 tuples per page
+    col_ntuples: np.ndarray   # f32
+    # ---- per-stream queries (S, Q) ---------------------------------------
+    q_start: np.ndarray       # f32 absolute first tuple
+    q_len: np.ndarray         # f32 tuples scanned
+    q_rate: np.ndarray        # f32 tuples/sec CPU rate
+    q_cols: np.ndarray        # bool (S, Q, C) column mask
+    n_q: np.ndarray           # i32 (S,) valid queries per stream
+
+    @property
+    def nb(self) -> int:
+        """Number of requested buckets in the PBM timeline."""
+        return self.n_groups * self.buckets_per_group
+
+    @property
+    def not_requested(self) -> int:
+        """Bucket sentinel for resident pages no active scan wants."""
+        return self.nb
+
+
+def build_spec(
+    db: Database,
+    streams: Sequence[Sequence[ScanSpec]],
+    n_groups: int = 10,
+    buckets_per_group: int = 4,
+) -> SimSpec:
+    """Flatten a single-table workload into a :class:`SimSpec`."""
+    tables = {s.table for stream in streams for s in stream}
+    if len(tables) != 1:
+        raise ValueError(f"array backend needs a single table, got {tables}")
+    table = db.tables[next(iter(tables))]
+    col_names: List[str] = list(table.columns)
+    cindex = {c: i for i, c in enumerate(col_names)}
+    C = len(col_names)
+
+    sizes, firsts, lasts, pcols = [], [], [], []
+    col_start = np.zeros(C, np.int32)
+    col_npages = np.zeros(C, np.int32)
+    col_tpp = np.zeros(C, np.float32)
+    off = 0
+    for ci, cname in enumerate(col_names):
+        col = table.columns[cname]
+        col_start[ci] = off
+        col_npages[ci] = len(col.pages)
+        col_tpp[ci] = col.n_tuples / len(col.pages)
+        for p in col.pages:
+            sizes.append(p.size_bytes)
+            firsts.append(p.first_tuple)
+            lasts.append(p.last_tuple)
+            pcols.append(ci)
+        off += len(col.pages)
+
+    P = ((off + PAGE_PAD - 1) // PAGE_PAD) * PAGE_PAD
+    pad = P - off
+    page_size = np.asarray(sizes + [0] * pad, np.float32)
+    page_first = np.asarray(firsts + [0] * pad, np.float32)
+    page_last = np.asarray(lasts + [0] * pad, np.float32)
+    page_col = np.asarray(pcols + [0] * pad, np.int32)
+    page_valid = np.asarray([True] * off + [False] * pad, bool)
+
+    S = len(streams)
+    Q = max(len(s) for s in streams)
+    q_start = np.zeros((S, Q), np.float32)
+    q_len = np.ones((S, Q), np.float32)
+    q_rate = np.full((S, Q), 1.0, np.float32)
+    q_cols = np.zeros((S, Q, C), bool)
+    n_q = np.zeros(S, np.int32)
+    for si, stream in enumerate(streams):
+        n_q[si] = len(stream)
+        for qi, spec in enumerate(stream):
+            if len(spec.ranges) != 1:
+                raise ValueError("array backend supports single-range scans")
+            a, b = spec.ranges[0]
+            q_start[si, qi] = a
+            q_len[si, qi] = b - a
+            q_rate[si, qi] = spec.tuple_rate
+            for c in spec.columns:
+                q_cols[si, qi, cindex[c]] = True
+
+    return SimSpec(
+        n_pages=P,
+        n_streams=S,
+        n_queries=Q,
+        n_cols=C,
+        n_groups=n_groups,
+        buckets_per_group=buckets_per_group,
+        page_size=page_size,
+        page_first=page_first,
+        page_last=page_last,
+        page_col=page_col,
+        page_valid=page_valid,
+        col_start=col_start,
+        col_npages=col_npages,
+        col_tpp=col_tpp,
+        col_ntuples=np.full(C, float(table.n_tuples), np.float32),
+        q_start=q_start,
+        q_len=q_len,
+        q_rate=q_rate,
+        q_cols=q_cols,
+        n_q=n_q,
+    )

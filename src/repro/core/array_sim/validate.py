@@ -1,0 +1,107 @@
+"""Cross-validation harness: array backend vs the discrete-event engine.
+
+Runs the same scaled microbenchmark workload through both simulators and
+reports, per policy, the relative error of the two paper metrics (average
+stream time and total I/O volume).  The array backend is a discretised
+fluid approximation of the event engine, so small deviations are expected;
+the acceptance bar for this repo is 10% on the default operating point
+(buffer = 40% of the accessed working set, 700 MB/s, 8 streams — the
+quick-pass configuration of ``benchmarks/microbench.py``).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.core.array_sim.validate           # default point
+    PYTHONPATH=src python -m repro.core.array_sim.validate --scale 0.1
+
+Also consumed by ``tests/test_array_sim.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List, Optional, Sequence
+
+from ..engine import EngineConfig, run_workload
+from ..workload import make_lineitem_db, micro_accessed_bytes, micro_streams
+from .sim import make_runner, run_workload_array
+from .spec import build_spec
+
+
+def cross_validate(
+    scale: float = 0.25,
+    n_streams: int = 8,
+    queries_per_stream: int = 16,
+    seed: int = 3,
+    buffer_frac: float = 0.4,
+    bandwidth: float = 700e6,
+    policies: Sequence[str] = ("lru", "pbm"),
+    time_slice: Optional[float] = None,
+) -> List[Dict]:
+    """Run event + array backends on one microbenchmark point; return one
+    row per policy with both results and their relative differences."""
+    if time_slice is None:
+        time_slice = 0.1 * scale  # microbench convention
+    db = make_lineitem_db(scale_tuples=int(180_000_000 * scale))
+    ws = micro_accessed_bytes(db)
+    streams = micro_streams(db, n_streams=n_streams,
+                            queries_per_stream=queries_per_stream, seed=seed)
+    cap = max(1 << 22, int(buffer_frac * ws))
+    spec = build_spec(db, streams)
+
+    rows: List[Dict] = []
+    for pol in policies:
+        cfg = EngineConfig(bandwidth=bandwidth, buffer_bytes=cap,
+                           sample_interval=2.0, pbm_time_slice=time_slice)
+        t0 = time.time()
+        ev = run_workload(db, streams, pol, cfg)
+        ev_wall = time.time() - t0
+        runner = make_runner(spec, bandwidth_ref=bandwidth,
+                             time_slice=time_slice, static_policy=pol)
+        ar = run_workload_array(
+            db, streams, pol, capacity_bytes=cap, bandwidth=bandwidth,
+            time_slice=time_slice, spec=spec, runner=runner,
+        )
+        rows.append({
+            "policy": pol,
+            "buffer_frac": buffer_frac,
+            "event_stream_time_s": round(ev.avg_stream_time, 4),
+            "array_stream_time_s": round(ar.avg_stream_time, 4),
+            "event_io_gb": round(ev.io_gb, 4),
+            "array_io_gb": round(ar.io_gb, 4),
+            "stream_time_rel_err": round(
+                ar.avg_stream_time / max(ev.avg_stream_time, 1e-12) - 1, 4),
+            "io_rel_err": round(ar.io_gb / max(ev.io_gb, 1e-12) - 1, 4),
+            "event_wall_s": round(ev_wall, 3),
+            "array_wall_s": round(ar.wall_s, 3),
+            "array_steps": ar.steps,
+        })
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--buffer-frac", type=float, default=0.4)
+    ap.add_argument("--streams", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=3)
+    args = ap.parse_args()
+    rows = cross_validate(
+        scale=args.scale, n_streams=args.streams,
+        queries_per_stream=args.queries, seed=args.seed,
+        buffer_frac=args.buffer_frac,
+    )
+    for r in rows:
+        print(
+            f"{r['policy']:4s} stream_time: event={r['event_stream_time_s']:.2f}s "
+            f"array={r['array_stream_time_s']:.2f}s "
+            f"({r['stream_time_rel_err']*100:+.1f}%) | io: "
+            f"event={r['event_io_gb']:.3f}GB array={r['array_io_gb']:.3f}GB "
+            f"({r['io_rel_err']*100:+.1f}%) | wall event={r['event_wall_s']:.2f}s "
+            f"array={r['array_wall_s']:.2f}s"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,7 @@ from .flash_attention import flash_attention_kernel
 from .mamba2_scan import mamba2_scan_kernel
 from .mlstm import mlstm_chunked_kernel
 from .paged_attention import paged_attention_kernel
+from .pbm_timeline import pbm_timeline_step_kernel
 
 _BACKEND = "auto"
 
@@ -83,6 +84,28 @@ def mamba2_scan(xh, a, b, c, chunk: int = 128):
         return mamba2_scan_kernel(xh, a, b, c, chunk=chunk, interpret=True)
     y, _ = ref.mamba2_scan_ref(xh, a, b, c)
     return y
+
+
+def pbm_timeline_step(bucket, b_target, last_used, sizes, evictable,
+                      time_passed, k, need_free, policy, now,
+                      *, nb: int, m: int, vmax: int = 64):
+    """Timeline shift + spill + batched evict selection (array PBM core).
+
+    Called from inside the already-jitted ``array_sim`` step, so no jit
+    wrapper here; backend policy picks the Mosaic kernel on TPU and the
+    jnp oracle elsewhere (the oracle is itself fully vectorised).
+    """
+    mode = _use_pallas()
+    if mode is not False:
+        return pbm_timeline_step_kernel(
+            bucket, b_target, last_used, sizes, evictable,
+            time_passed, k, need_free, policy, now,
+            nb=nb, m=m, vmax=vmax, interpret=(mode is None),
+        )
+    return ref.pbm_timeline_step_ref(
+        bucket, b_target, last_used, sizes, evictable,
+        time_passed, k, need_free, policy, now, nb=nb, m=m, vmax=vmax,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -1,0 +1,148 @@
+"""Array-native simulation core: cross-validation vs the event engine,
+vmap batching, kernel/oracle parity, and cold-scan exactness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scans import ScanSpec
+from repro.core.workload import (
+    Q6_COLUMNS,
+    make_lineitem_db,
+    micro_accessed_bytes,
+    micro_streams,
+)
+from repro.core.array_sim import (
+    build_spec,
+    cross_validate,
+    make_config,
+    make_runner,
+    result_from_state,
+    run_workload_array,
+    stack_configs,
+)
+
+
+# ----------------------------------------------------- cold-scan anchor ----
+
+def test_single_scan_io_is_exact_cold_volume():
+    """One cold scan with a pool that fits it: I/O must equal the page
+    bytes of the accessed ranges exactly (no phantom or missing loads)."""
+    db = make_lineitem_db(scale_tuples=4_000_000)
+    t = db.tables["lineitem"]
+    spec = ScanSpec("lineitem", Q6_COLUMNS, ((0, 4_000_000),), tuple_rate=240e6)
+    expected = t.scan_bytes(Q6_COLUMNS, 0, 4_000_000)
+    r = run_workload_array(db, [[spec]], "lru", capacity_bytes=64 << 20,
+                           bandwidth=700e6, time_slice=0.0025)
+    assert r.total_io_bytes == pytest.approx(expected, rel=1e-6)
+    assert r.stream_times[0] > 0
+
+
+# -------------------------------------------- cross-validation (10% bar) ---
+
+def test_cross_validation_scaled_microbenchmark():
+    """Acceptance: array-LRU / array-PBM avg stream time within 10% of the
+    event engine on the scaled microbenchmark default operating point
+    (quick-pass scale, buffer = 40% of working set, 700 MB/s, 8 streams)."""
+    rows = cross_validate(scale=0.25, buffer_frac=0.4)
+    for r in rows:
+        assert abs(r["stream_time_rel_err"]) < 0.10, r
+        assert abs(r["io_rel_err"]) < 0.15, r
+
+
+# ----------------------------------------------------------- vmap smoke ----
+
+def test_vmap_batches_four_buffer_points_in_one_call():
+    db = make_lineitem_db(scale_tuples=6_000_000)
+    ws = micro_accessed_bytes(db)
+    streams = micro_streams(db, n_streams=2, queries_per_stream=2, seed=3)
+    spec = build_spec(db, streams)
+    runner = make_runner(spec, bandwidth_ref=700e6, time_slice=0.005,
+                         static_policy="pbm")
+    fracs = [0.4, 0.6, 0.8, 1.0]
+    cfgs = stack_configs([
+        make_config(spec, max(1 << 22, int(f * ws)), 700e6, "pbm")
+        for f in fracs
+    ])
+    states = jax.block_until_ready(jax.jit(jax.vmap(runner))(cfgs))
+    assert states.io_bytes.shape == (4,)
+    results = [
+        result_from_state(jax.tree.map(lambda x, i=i: x[i], states), "pbm")
+        for i in range(4)
+    ]
+    for r in results:
+        assert all(t >= 0 for t in r.stream_times)
+        assert r.total_io_bytes > 0
+        assert np.isfinite(r.avg_stream_time)
+    # more buffer -> no more I/O (weak monotonicity with 5% slack)
+    ios = [r.total_io_bytes for r in results]
+    for a, b in zip(ios, ios[1:]):
+        assert b <= a * 1.05
+
+    # batched configs must agree with one-at-a-time runs
+    solo = jax.block_until_ready(runner(jax.tree.map(lambda x: x[1], cfgs)))
+    assert float(solo.io_bytes) == pytest.approx(ios[1], rel=1e-6)
+
+
+def test_vmap_batches_policies_with_generic_runner():
+    db = make_lineitem_db(scale_tuples=6_000_000)
+    ws = micro_accessed_bytes(db)
+    streams = micro_streams(db, n_streams=2, queries_per_stream=2, seed=3)
+    spec = build_spec(db, streams)
+    runner = make_runner(spec, bandwidth_ref=700e6, time_slice=0.005)
+    cap = max(1 << 22, int(0.5 * ws))
+    cfgs = stack_configs([
+        make_config(spec, cap, 700e6, pol)
+        for pol in ("lru", "pbm", "lru", "pbm")
+    ])
+    states = jax.block_until_ready(jax.jit(jax.vmap(runner))(cfgs))
+    io = np.asarray(states.io_bytes)
+    assert np.all(io > 0)
+    # identical configs inside the batch give identical results
+    assert io[0] == io[2] and io[1] == io[3]
+
+
+# ----------------------------------------- Pallas kernel vs jnp oracle -----
+
+def test_pbm_timeline_kernel_matches_reference_interpret():
+    from repro.kernels.pbm_timeline import pbm_timeline_step_kernel
+    from repro.kernels.ref import pbm_timeline_step_ref
+
+    rng = np.random.default_rng(7)
+    P, nb, m = 128, 40, 4
+    for _ in range(8):
+        bucket = jnp.asarray(rng.integers(0, nb + 1, P), jnp.int32)
+        b_target = jnp.asarray(rng.integers(0, nb + 1, P), jnp.int32)
+        last_used = jnp.asarray(rng.random(P) * 10, jnp.float32)
+        sizes = jnp.asarray(
+            rng.choice([524288.0, 262144.0, 1024.0], P), jnp.float32)
+        evictable = jnp.asarray(rng.random(P) > 0.4)
+        tp = jnp.int32(rng.integers(0, 1000))
+        k = jnp.int32(rng.integers(0, 5))
+        need = jnp.float32(rng.choice([0.0, 1e6, 8e6, 5e7]))
+        pol = jnp.int32(rng.integers(0, 2))
+        now = jnp.float32(12.0)
+        br, er = pbm_timeline_step_ref(
+            bucket, b_target, last_used, sizes, evictable,
+            tp, k, need, pol, now, nb=nb, m=m)
+        bk, ek = pbm_timeline_step_kernel(
+            bucket, b_target, last_used, sizes, evictable,
+            tp, k, need, pol, now, nb=nb, m=m, interpret=True)
+        np.testing.assert_array_equal(np.asarray(br), np.asarray(bk))
+        np.testing.assert_array_equal(np.asarray(er), np.asarray(ek))
+
+
+# --------------------------------------------------- CSV row schema --------
+
+def test_array_rows_share_event_row_schema():
+    from benchmarks import microbench
+
+    rows = microbench.sweep_array("buffer", ["pbm"], scale=0.05)
+    assert rows, "every point was skipped"
+    event_keys = {"policy", "avg_stream_time_s", "io_gb", "wall_s",
+                  "sweep", "point"}
+    for r in rows:
+        assert event_keys <= set(r.keys())
+        assert isinstance(r["avg_stream_time_s"], float)
+        assert isinstance(r["io_gb"], float)

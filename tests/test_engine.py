@@ -1,6 +1,7 @@
 """Engine integration tests: completion, conservation, policy orderings."""
 
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests need it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import EngineConfig, run_workload

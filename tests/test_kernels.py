@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests need it
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.flash_attention import flash_attention_kernel

@@ -1,6 +1,7 @@
 """PDT SID/RID translation (paper §2.1 Fig. 4) — unit + property tests."""
 
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests need it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import PDT, CScanMergeState

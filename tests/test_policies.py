@@ -4,6 +4,7 @@ eviction preferences, shared-chunk behaviour of ABM relevance functions."""
 import random
 
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: property tests need it
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

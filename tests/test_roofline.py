@@ -9,9 +9,11 @@ from benchmarks.hlo_analysis import HloModule
 
 
 def _totals(fn, *args):
+    from repro.launch.dryrun import cost_analysis_dict
+
     c = jax.jit(fn).lower(*args).compile()
     mod = HloModule(c.as_text())
-    return mod.totals(), c.cost_analysis()
+    return mod.totals(), cost_analysis_dict(c)
 
 
 A = jax.ShapeDtypeStruct((256, 256), jnp.float32)
