@@ -42,9 +42,10 @@ def main() -> None:
                     help="paper-scale sweeps (minutes); default is a scaled "
                          "quick pass")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: quick scale, buffer sweep only (the "
-                         "micro working set must stay large enough that "
-                         "the 10%% buffer point has a sane pool)")
+                    help="CI smoke: quick scale, buffer sweep only — every "
+                         "buffer point runs on both backends (the array "
+                         "step's plan-trigger semantics need no envelope "
+                         "skips)")
     ap.add_argument("--backend", choices=["event", "array"], default="event",
                     help="microbenchmark backend: dict/heapq event engine "
                          "or the vmap-able array substrate")

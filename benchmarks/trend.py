@@ -1,0 +1,138 @@
+"""Benchmark trend report: diff two results directories into a markdown table.
+
+CI runs the benchmark smoke on every PR and uploads
+``experiments/results/*.json``; this tool compares the fresh results
+against the previous successful run's artifact and prints a per-policy
+delta table (average stream time and I/O volume per sweep point) suitable
+for ``$GITHUB_STEP_SUMMARY``:
+
+    python benchmarks/trend.py <previous-dir> <current-dir>
+
+Missing files, unknown schemas, and first runs (no baseline) degrade to a
+note instead of an error — the trend step must never fail the build.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+#: result files carrying sweep rows (policy/sweep/point/avg_stream_time_s/io_gb)
+SWEEP_FILES = ("micro.json", "micro_array.json", "tpch.json")
+
+
+def _load_rows(path: str) -> List[dict]:
+    try:
+        with open(path) as f:
+            rows = json.load(f)
+        return rows if isinstance(rows, list) else []
+    except (OSError, ValueError):
+        return []
+
+
+def _index(rows: List[dict]) -> Dict[Tuple, dict]:
+    out = {}
+    for r in rows:
+        if not isinstance(r, dict):
+            continue
+        key = (r.get("sweep"), r.get("point"), r.get("policy"))
+        if None in key:
+            continue
+        out[key] = r
+    return out
+
+
+def _fmt_delta(new: float, old: float) -> str:
+    if old in (None, 0) or new is None:
+        return "n/a"
+    d = new / old - 1
+    return f"{d*100:+.1f}%"
+
+
+def _race_section(prev_dir: str, cur_dir: str) -> List[str]:
+    """Render the batched-race summary (speedup of the vmapped array sweep
+    vs sequential event runs) — the substrate's headline wall-clock trend."""
+    # batched_race.json holds a single summary dict, not a row list
+    def _load_dict(path):
+        try:
+            with open(path) as f:
+                d = json.load(f)
+            return d if isinstance(d, dict) else None
+        except (OSError, ValueError):
+            return None
+
+    cur = _load_dict(os.path.join(cur_dir, "batched_race.json"))
+    prev = _load_dict(os.path.join(prev_dir, "batched_race.json"))
+    if cur is None:
+        return []
+    lines = ["### batched_race.json", "",
+             "| metric | current | previous | Δ |", "|---|---|---|---|"]
+    pv = prev or {}
+    for key in ("speedup", "array_vmapped_wall_s", "event_sequential_wall_s"):
+        lines.append(
+            f"| {key} | {cur.get(key)} | {pv.get(key, 'n/a')} | "
+            f"{_fmt_delta(cur.get(key), pv.get(key))} |"
+        )
+    if cur.get("truncated_fracs"):
+        lines.append(f"| truncated lanes | {cur['truncated_fracs']} | | |")
+    lines.append("")
+    return lines
+
+
+def report(prev_dir: str, cur_dir: str) -> str:
+    lines: List[str] = ["## Benchmark trend vs previous run", ""]
+    any_table = False
+    for fname in SWEEP_FILES:
+        prev = _index(_load_rows(os.path.join(prev_dir, fname)))
+        cur = _index(_load_rows(os.path.join(cur_dir, fname)))
+        if not cur:
+            continue
+        if not prev:
+            lines.append(f"_{fname}: no baseline in previous artifact "
+                         "(first run?)_")
+            lines.append("")
+            continue
+        any_table = True
+        lines.append(f"### {fname}")
+        lines.append("")
+        lines.append("| sweep | point | policy | stream time (s) | Δ time | "
+                     "io (GB) | Δ io |")
+        lines.append("|---|---|---|---|---|---|---|")
+        for key in sorted(cur.keys(), key=str):
+            c = cur[key]
+            p = prev.get(key)
+            t_new, io_new = c.get("avg_stream_time_s"), c.get("io_gb")
+            if p is None:
+                lines.append(
+                    f"| {key[0]} | {key[1]} | {key[2]} | {t_new} | new | "
+                    f"{io_new} | new |"
+                )
+                continue
+            lines.append(
+                f"| {key[0]} | {key[1]} | {key[2]} | {t_new} | "
+                f"{_fmt_delta(t_new, p.get('avg_stream_time_s'))} | "
+                f"{io_new} | {_fmt_delta(io_new, p.get('io_gb'))} |"
+            )
+        lines.append("")
+    race = _race_section(prev_dir, cur_dir)
+    if race:
+        any_table = True
+        lines.extend(race)
+    if not any_table and len(lines) <= 2:
+        lines.append("_no comparable sweep results found_")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print("usage: python benchmarks/trend.py <previous-dir> <current-dir>",
+              file=sys.stderr)
+        return 0  # never fail the build
+    print(report(sys.argv[1], sys.argv[2]))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

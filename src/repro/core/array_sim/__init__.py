@@ -5,6 +5,12 @@ as fixed-shape JAX arrays with a pure ``step(state, cfg) -> state``:
 one ``jax.vmap`` call batches an entire sweep axis, and the PBM bucketed
 timeline runs as a Pallas kernel on TPU (jnp oracle elsewhere).
 
+Scans advance with the engine's per-page plan-trigger semantics (each
+column keeps a fractional frontier cursor and blocks only at absent
+triggers), so the full paper envelope runs batched — buffer pools from
+10% of the accessed working set upward, cross-validated against the
+event engine per ``validate.ERROR_BARS``.
+
 Kept separate from ``repro.core.__init__`` so the dict-based engine stays
 importable without pulling in JAX.
 """
@@ -24,7 +30,7 @@ from .sim import (
     stack_configs,
 )
 from .policies import next_consumption, target_buckets, time_to_bucket
-from .validate import cross_validate
+from .validate import cross_validate, cross_validate_sweep
 
 __all__ = [
     "ArrayResult",
@@ -34,6 +40,7 @@ __all__ = [
     "SimState",
     "build_spec",
     "cross_validate",
+    "cross_validate_sweep",
     "init_state",
     "make_config",
     "make_runner",

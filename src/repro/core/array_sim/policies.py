@@ -47,10 +47,22 @@ def time_to_bucket(eta, time_slice, n_groups, m):
 
 
 def next_consumption(page_first, page_last, page_col, cols_cur, cur_abs,
-                     scan_end, speed, active):
+                     scan_end, speed, active, scan_start=None, eps=None):
     """``PageNextConsumption`` over the whole page array: min over streams
     of estimated seconds until the page's consumption, :data:`BIG` where no
     registered scan wants the page.
+
+    Consumption is **plan-trigger granular**, mirroring the event engine's
+    access plan: a page is consumed the instant the scan cursor crosses its
+    *trigger* ``max(page_first, scan_start)`` (the page's first tuple, or
+    the scan start for the page straddling it), and from then on the scan
+    no longer registers interest — even while the cursor is still inside
+    the page's tuple range.  ``eps`` absorbs f32 cursor rounding so a page
+    whose trigger the cursor sits exactly on still counts as pending.
+
+    ``scan_start=None`` keeps the legacy page-overlap interest
+    (``page_last > cur``): the registration-time view where nothing has
+    been consumed yet, used by the parity property tests.
 
     Unrolled over streams (S is small and static): 1-D elementwise ops per
     stream fuse to a single fast loop on CPU, where the equivalent (S, P)
@@ -60,13 +72,22 @@ def next_consumption(page_first, page_last, page_col, cols_cur, cur_abs,
     colmask_sp = cols_cur[:, page_col]           # one (S, P) gather
     eta = jnp.full(page_first.shape, BIG)
     for s in range(S):
+        if scan_start is None:
+            trigger = page_first
+            pending = page_last > cur_abs[s]
+        else:
+            trigger = jnp.maximum(page_first, scan_start[s])
+            tol = 0.0 if eps is None else eps[s]
+            pending = (trigger >= cur_abs[s] - tol) & (
+                page_last > scan_start[s]
+            )
         interest = (
             colmask_sp[s]                        # scan touches the column
-            & (page_last > cur_abs[s])           # not yet fully consumed
+            & pending                            # trigger not yet crossed
             & (page_first < scan_end[s])         # inside the scanned range
             & active[s]
         )
-        e = jnp.maximum(page_first - cur_abs[s], 0.0) / jnp.maximum(
+        e = jnp.maximum(trigger - cur_abs[s], 0.0) / jnp.maximum(
             speed[s], 1e-6
         )
         eta = jnp.minimum(eta, jnp.where(interest, e, BIG))

@@ -8,10 +8,18 @@ as a **pure, fixed-shape array program**:
   and per-stream state (query index, cursor, speed estimate) live in dense
   JAX arrays (:class:`SimState`);
 * a pure ``step(state, cfg) -> state`` advances the whole machine by one
-  page-transfer time ``dt`` — scans consume tuples while their pages are
-  resident and block exactly at page boundaries whose successor is absent;
-  a bandwidth-budgeted I/O server pops the request FIFO; the plugged
-  policy (array LRU or array PBM) picks batched eviction victims;
+  page-transfer time ``dt`` — scans consume tuples with the engine's
+  **per-page plan-trigger semantics**: each column keeps a fractional
+  frontier cursor, a page is needed only at the instant the cursor crosses
+  its trigger (``max(page_first, scan_start)``), and a scan blocks exactly
+  at the earliest absent trigger across its columns — never on pages whose
+  trigger it already crossed.  A bandwidth-budgeted I/O server pops the
+  request FIFO; the plugged policy (array LRU or array PBM) picks batched
+  eviction victims.  Because a blocked scan pins nothing and a running
+  burst pins only its last ~``segment_pages`` plan entries, pools far
+  below ``streams x columns`` pages stay live — the paper's small-buffer
+  operating points (10-40%) run on this substrate, cross-validated
+  against the event engine (see ``validate.ERROR_BARS``);
 * steps come in two flavours on the paper's own cadence: *within* a PBM
   time slice the bucketed timeline is static (cheap step: consume, load,
   evict), and once per ``time_slice`` a *refresh* step recomputes every
@@ -38,9 +46,22 @@ import numpy as np
 from .policies import BIG_CUT, next_consumption, target_buckets
 from .spec import SimSpec, build_spec
 
-_EWMA = 0.3           # speed smoothing; engine parity (ScanState ewma=0.3)
 _REQ_NONE = 1 << 24   # FIFO stamp sentinel: page not currently requested
+_JIT_STEPS = 6        # LRU-clock jitter amplitude in step-lengths
 _LOAD_MAX = 6         # load grants per step (credit caps at ~5 pages)
+_PROG_MIN = 1.0       # tuples: a slice with less progress skips the EWMA
+_BURST_W = 0.75       # burst-report weight in the speed estimate: the
+                      # engine's per-burst EWMA samples the CPU rate
+                      # between stalls and the effective rate at stall
+                      # exits, so its estimate sits between the two
+_RATE_JIT = 0.08      # per-(stream, query) CPU pacing skew amplitude
+_GATE_P = 0.105       # blocked-scan window-refresh rate (engine wakes
+                      # re-issue the prefetch window every ~10-20ms)
+_DIP_P = 0.31         # fraction of steps a stream's push speed dips to
+                      # its effective rate (stall-exit EWMA crash)
+_DIP_DEPTH = 0.8     # dip floor as a fraction of the effective rate
+_SEG_PAGES = 2.0      # engine segment_pages: plan entries pinned per burst
+_SEG_WIN = 2          # static back-window (pages/column) the pin scan walks
 
 
 class ArraySimConfig(NamedTuple):
@@ -59,10 +80,14 @@ class SimState(NamedTuple):
     last_used: jax.Array      # f32 LRU clock
     bucket: jax.Array         # i32 PBM timeline position (nb == not-requested)
     req_step: jax.Array       # i32 FIFO stamp: step the page was first wanted
+    req_tie: jax.Array        # i32 within-cohort service rank fixed at stamp
+    fresh: jax.Array          # bool: loaded but not consumed since (churn)
     # ---- per-stream (S,) -------------------------------------------------
     qidx: jax.Array           # i32 current query (== n_q when stream done)
     pos: jax.Array            # f32 tuples consumed within current query
-    speed: jax.Array          # f32 EWMA tuples/sec
+    speed: jax.Array          # f32 EWMA tuples/sec (effective, stalls incl.)
+    consumed: jax.Array       # f32 lifetime tuples consumed (speed input)
+    consumed_ref: jax.Array   # f32 `consumed` at the last slice boundary
     stream_done_t: jax.Array  # f32 finish time, -1 while running
     # ---- scalars ---------------------------------------------------------
     t: jax.Array              # f32 sim clock
@@ -71,6 +96,8 @@ class SimState(NamedTuple):
     io_credit: jax.Array      # f32 banked I/O bytes (partial in-flight load)
     io_bytes: jax.Array       # f32 lifetime loaded bytes (paper I/O volume)
     loads: jax.Array          # i32 lifetime page loads
+    loads_demand: jax.Array   # i32 loads granted for a blocking frontier
+    churn: jax.Array          # i32 loads evicted before any consumption
 
 
 @dataclass
@@ -100,19 +127,42 @@ _POLICY_NAMES = {v: k for k, v in POLICY_IDS.items()}
 
 
 class _View(NamedTuple):
-    """Derived per-stream view of the current query + cursor.  Carried
-    alongside :class:`SimState` so each step computes it once (this step's
-    post-advance view is the next step's pre-advance view)."""
+    """Derived per-stream view of the current query + per-column cursors.
+    Carried alongside :class:`SimState` so each step computes it once (this
+    step's post-advance view is the next step's pre-advance view).
 
-    active: jax.Array   # (S,) bool
-    length: jax.Array   # (S,) f32
-    rate: jax.Array     # (S,) f32
-    cols: jax.Array     # (S, C) bool
-    cur: jax.Array      # (S,) f32 absolute cursor
-    end: jax.Array      # (S,) f32 absolute scan end
-    local: jax.Array    # (S, C) i32 page index within column
-    pidx: jax.Array     # (S, C) i32 global page id under the cursor
-    need: jax.Array     # (S, C) bool
+    The *frontier* of a column is its first page whose trigger
+    (``max(page_first, scan_start)``) the scan cursor has not crossed yet —
+    the engine's ``plan_idx`` restricted to that column.  ``ftrig`` is the
+    fractional per-column cursor: the absolute tuple position at which the
+    column next needs a page resident."""
+
+    active: jax.Array    # (S,) bool
+    length: jax.Array    # (S,) f32
+    rate: jax.Array      # (S,) f32
+    cols: jax.Array      # (S, C) bool
+    start: jax.Array     # (S,) f32 absolute scan start
+    cur: jax.Array       # (S,) f32 absolute cursor
+    end: jax.Array       # (S,) f32 absolute scan end
+    eps: jax.Array       # (S,) f32 cursor tolerance (f32 rounding guard)
+    frontier: jax.Array  # (S, C) i32 local index of next unconsumed page
+                         #   (== col_npages when the column is exhausted)
+    fpidx: jax.Array     # (S, C) i32 global page id of the frontier (clamped)
+    ftrig: jax.Array     # (S, C) f32 fractional per-column cursor (trigger)
+    fneed: jax.Array     # (S, C) bool frontier exists inside the scan range
+
+
+def _u01(idx, t, t_mult, idx_mult=2654435761):
+    """Deterministic per-(lane, time) uniform draw in [0, 1): Knuth
+    multiplicative hash of a lane index against a time-like salt, top 24
+    bits scaled.  Pure — the jit/vmap-safe stand-in for an RNG stream
+    everywhere the step needs the event engine's timing noise.  ``t`` may
+    be a scalar (sim step / slice counter) or an array shaped like
+    ``idx`` (per-lane stamps); distinct ``t_mult``/``idx_mult`` pairs
+    decorrelate the independent noise sources."""
+    h = idx.astype(jnp.uint32) * jnp.uint32(idx_mult) + \
+        jnp.asarray(t).astype(jnp.uint32) * jnp.uint32(t_mult)
+    return (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
 
 
 def make_config(
@@ -144,9 +194,13 @@ def init_state(spec: SimSpec) -> SimState:
         last_used=jnp.full(P, -1e9, jnp.float32),
         bucket=jnp.full(P, spec.not_requested, jnp.int32),
         req_step=jnp.full(P, _REQ_NONE, jnp.int32),
+        req_tie=jnp.zeros(P, jnp.int32),
+        fresh=jnp.zeros(P, bool),
         qidx=jnp.zeros(S, jnp.int32),
         pos=jnp.zeros(S, jnp.float32),
         speed=jnp.asarray(spec.q_rate[:, 0]),
+        consumed=jnp.zeros(S, jnp.float32),
+        consumed_ref=jnp.zeros(S, jnp.float32),
         stream_done_t=jnp.where(n_q > 0, -1.0, 0.0).astype(jnp.float32),
         t=jnp.float32(0.0),
         steps=jnp.int32(0),
@@ -154,6 +208,8 @@ def init_state(spec: SimSpec) -> SimState:
         io_credit=jnp.float32(0.0),
         io_bytes=jnp.float32(0.0),
         loads=jnp.int32(0),
+        loads_demand=jnp.int32(0),
+        churn=jnp.int32(0),
     )
 
 
@@ -163,11 +219,12 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
     """Build the pure ``step(state, cfg) -> state``.
 
     ``refresh=False`` is the cheap within-slice step: the PBM timeline is
-    static except for just-loaded pages (bucketed individually) and pages
-    entering consumption (bucket 0).  ``refresh=True`` is the once-per-
+    static except for the pages whose estimate just changed — this step's
+    loads and the triggers just crossed.  ``refresh=True`` is the once-per-
     ``time_slice`` boundary step that recomputes every page's next
-    consumption, demotes no-longer-requested pages, and shifts the
-    timeline one slice (spilled buckets re-bucket at the fresh estimate).
+    consumption (plan-trigger granular), demotes no-longer-requested
+    pages, drops dead queue entries, and shifts the timeline one slice
+    (spilled buckets re-bucket at the fresh estimate).
     """
     from repro.kernels import ops as kops
 
@@ -175,10 +232,13 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
     NR = spec.not_requested
     nb, m = spec.nb, spec.buckets_per_group
     K = int(prefetch_pages)
-    # deepest per-column readahead actually reachable: the scatter that
-    # publishes request slots walks K_LOOP+1 entries per (stream, column),
-    # so a policy-specialised step (PBM readahead depth is 1) is cheaper
-    K_LOOP = min(K, 1 if static_policy == "pbm" else 4)
+    # deepest per-column readahead actually reachable: the plan-entry-count
+    # window spreads ~K entries over the scanned columns, so the scatter
+    # only needs to walk K_LOOP+1 slots per (stream, column)
+    K_LOOP = min(K, 4)
+    # static per-column trigger lookahead: the most page triggers a scan
+    # can cross in one step, plus one for the conservative advance cap
+    W = spec.trigger_window(float(dt))
     dt = jnp.float32(dt)
     time_slice_f = jnp.float32(time_slice)
 
@@ -200,7 +260,8 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
     INF = jnp.float32(np.inf)
 
     def query_view(qidx, pos) -> _View:
-        """Gather the per-stream view of the current query + cursor."""
+        """Gather the per-stream view of the current query + per-column
+        frontier cursors (plan-trigger granular, see :class:`_View`)."""
         qi = jnp.clip(qidx, 0, Q - 1)
         active = qidx < n_q
         start = q_start[s_idx, qi]
@@ -209,6 +270,10 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         cols = q_cols[s_idx, qi]                       # (S, C)
         cur = start + pos
         end = start + length
+        # tolerance for "has the cursor crossed this trigger": one tuple
+        # plus the f32 ulp of the cursor magnitude, so rounding in
+        # ``cur + adv`` can never strand a trigger in limbo
+        eps = 1.0 + 4e-7 * end
         local = jnp.floor(cur[:, None] / col_tpp[None, :]).astype(jnp.int32)
         local = jnp.clip(local, 0, col_npages[None, :] - 1)
         # page boundaries are exact ints but tpp is fractional: correct the
@@ -218,35 +283,88 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         local = local + (cur[:, None] >= page_last[pidx0]).astype(jnp.int32)
         local = local - (cur[:, None] < page_first[pidx0]).astype(jnp.int32)
         local = jnp.clip(local, 0, col_npages[None, :] - 1)
-        pidx = col_start[None, :] + local              # (S, C)
-        need = active[:, None] & cols
-        return _View(active, length, rate, cols, cur, end, local, pidx, need)
+        pidx0 = col_start[None, :] + local
+        # frontier: the containing page iff its trigger is still ahead of
+        # (or at) the cursor, else the next page.  The trigger of the page
+        # straddling the scan start is the start itself (engine plan).
+        trig0 = jnp.maximum(page_first[pidx0], start[:, None])
+        consumed0 = trig0 < cur[:, None] - eps[:, None]
+        frontier = local + consumed0.astype(jnp.int32)  # (S, C), may == np
+        fpidx = col_start[None, :] + jnp.minimum(
+            frontier, col_npages[None, :] - 1
+        )
+        ftrig = jnp.maximum(page_first[fpidx], start[:, None])
+        fneed = (
+            active[:, None]
+            & cols
+            & (frontier < col_npages[None, :])
+            & (page_first[fpidx] < end[:, None])
+        )
+        return _View(active, length, rate, cols, start, cur, end, eps,
+                     frontier, fpidx, ftrig, fneed)
 
     def step(carry, cfg: ArraySimConfig):
         state, view = carry
         t2 = state.t + dt
 
-        # ================= CPU: consume while resident ====================
-        (active, length, rate, _cols, cur, end, local, pidx,
-         need) = view
-        res_need = state.resident[pidx]
-        blocked = jnp.any(need & ~res_need, axis=1)
-        runnable = active & ~blocked
-
-        # block exactly at the boundary of a page whose successor is absent
-        nxt_local = jnp.minimum(local + 1, col_npages[None, :] - 1)
-        nxt_exists = (local + 1 < col_npages[None, :]) & (
-            page_first[col_start[None, :] + nxt_local] < end[:, None]
+        # ============ CPU: consume up to the first absent trigger =========
+        (active, length, rate, _cols, start, cur, end, eps, frontier,
+         _fpidx, _ftrig, fneed) = view
+        # tie-break jitter for the LRU clock: every touch/load in one step
+        # would otherwise share the exact timestamp t2, and eviction would
+        # break those ties by page index — a SYSTEMATIC bias that carves
+        # the pool into a stable always-evicted side and a resident elite
+        # whose hit rate the event engine (with its total event-order
+        # recency) never reaches.  A deterministic per-(page, step) hash
+        # spanning _JIT_STEPS step-lengths reproduces the engine's order
+        # noise (its touch events spread over multi-step burst intervals,
+        # so recency may genuinely invert across a few neighbouring steps)
+        # while staying pure for jit/vmap (no RNG state).  The amplitude
+        # is calibrated against the event engine at the small-pool points.
+        jit_p = _JIT_STEPS * dt * _u01(jnp.arange(P, dtype=jnp.uint32),
+                                       state.steps, 40503)
+        # window of the next W+1 page triggers per (stream, column): entries
+        # w < W gate the advance (block at the first absent trigger), entry
+        # W is the conservative cap so one step never outruns the window
+        wk = jnp.arange(W + 1)                              # (W+1,)
+        w_local = frontier[:, :, None] + wk[None, None, :]  # (S, C, W+1)
+        w_pidx = col_start[None, :, None] + jnp.minimum(
+            w_local, col_npages[None, :, None] - 1
         )
-        nxt_missing = nxt_exists & ~state.resident[col_start[None, :] + nxt_local]
-        boundary = page_last[pidx] - cur[:, None]
-        lim = jnp.where(need & nxt_missing, jnp.maximum(boundary, 0.0), INF)
-        adv_lim = jnp.min(lim, axis=1)
+        w_trig = jnp.maximum(page_first[w_pidx], start[:, None, None])
+        w_need = (
+            fneed[:, :, None]
+            & (w_local < col_npages[None, :, None])
+            & (page_first[w_pidx] < end[:, None, None])
+        )
+        w_dist = jnp.maximum(w_trig - cur[:, None, None], 0.0)
+        # per-(stream, query) CPU-rate skew: the event engine's burst
+        # granularity paces each scan on its own event clock, so two scans
+        # at the same position drift apart within a query; the fluid step
+        # advances them in perfect lockstep, freezing phase alignments
+        # that inflate sharing at tiny pools (zero-mean per-STEP noise
+        # integrates away — the drift must be sustained within a query to
+        # outrun a small pool's residency window, while a large pool still
+        # tolerates it, exactly like the engine).  Deterministic hash of
+        # (stream, query): pure, vmap-safe, zero-mean across queries.
+        ur = _u01(jnp.arange(S, dtype=jnp.uint32), state.qidx, 48271)
+        rate_j = rate * (1.0 + _RATE_JIT * (2.0 * ur - 1.0))
+        absent = w_need[:, :, :W] & ~state.resident[w_pidx[:, :, :W]]
+        # per-column advance limit: distance to the first absent trigger,
+        # capped at the (W+1)-th trigger when every windowed page is
+        # resident (W is sized so the cap exceeds rate*dt for a full window)
+        lim = jnp.min(jnp.where(absent, w_dist[:, :, :W], INF), axis=2)
+        cap = jnp.where(w_need[:, :, W], w_dist[:, :, W], INF)
+        adv_lim = jnp.min(jnp.minimum(lim, cap), axis=1)    # (S,)
+        runnable = active & (adv_lim > 0.0)
         remaining = length - state.pos
         adv = jnp.where(
-            runnable, jnp.minimum(jnp.minimum(rate * dt, remaining), adv_lim), 0.0
+            runnable,
+            jnp.minimum(jnp.minimum(rate_j * dt, remaining), adv_lim),
+            0.0,
         )
         adv = jnp.maximum(adv, 0.0)
+        cur2_pre = cur + adv
 
         margin = jnp.maximum(0.5, 3e-5 * length)
         finished = runnable & (remaining - adv <= margin)
@@ -255,79 +373,207 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         newly_done = (qidx2 >= n_q) & (state.stream_done_t < 0)
         stream_done_t2 = jnp.where(newly_done, t2, state.stream_done_t)
 
-        inst = adv / dt
-        speed1 = jnp.where(
-            active, _EWMA * inst + (1 - _EWMA) * state.speed, state.speed
-        )
+        # speed estimation on the engine's report cadence, not per step: a
+        # per-step EWMA collapses a blocked scan's estimate toward zero in
+        # a few ms, which sends the very pages it waits for to far-future
+        # buckets.  The engine instead measures (Δvirt_pos / Δt) between
+        # consecutive bursts — stall time folded in, progressless intervals
+        # skipped — so the estimate tracks the *effective* scan rate.  The
+        # array analogue updates once per PBM slice from the cumulative
+        # consumed-tuples counter (refresh step below).
+        consumed2 = state.consumed + adv
         next_rate = q_rate[s_idx, jnp.clip(qidx2, 0, Q - 1)]
-        speed2 = jnp.where(finished, next_rate, speed1)  # fresh scan: reset
+        speed1 = jnp.where(finished, next_rate, state.speed)  # fresh scan
+        if refresh:
+            prog = consumed2 - state.consumed_ref
+            inst = prog / time_slice_f
+            speed2 = jnp.where(
+                active & (prog > _PROG_MIN) & ~finished,
+                _BURST_W * next_rate + (1.0 - _BURST_W) * inst,
+                speed1,
+            )
+            consumed_ref2 = consumed2
+        else:
+            speed2 = speed1
+            consumed_ref2 = state.consumed_ref
 
-        # touch consumed pages (LRU clock)
-        touch = need & runnable[:, None]
-        last_used2 = state.last_used.at[pidx].max(jnp.where(touch, t2, -INF))
+        # pages consumed this step: resident windowed pages whose trigger
+        # the cursor crossed (same predicate the next view's frontier uses,
+        # so crossing and frontier advance can never disagree)
+        crossed = (
+            w_need[:, :, :W]
+            & runnable[:, None, None]
+            & state.resident[w_pidx[:, :, :W]]
+            & (w_trig[:, :, :W] < (cur2_pre - eps)[:, None, None])
+        )
+        cross_pidx = w_pidx[:, :, :W]
+        # engine parity: the LRU clock ticks when a page is consumed, and
+        # only the pages of the running burst are pinned — a blocked scan
+        # pins nothing, a mid-page scan pins nothing it already consumed
+        last_used2 = state.last_used.at[cross_pidx].max(
+            jnp.where(crossed, t2 + jit_p[cross_pidx], -INF)
+        )
 
         # ================= post-advance view (I/O demand) =================
         view2 = query_view(qidx2, pos2)
-        (active2, _l2, _r2, cols2, cur2, end2, local2, pidx2,
-         need2) = view2
-        res2 = state.resident[pidx2]
-        demand = need2 & ~res2
+        (active2, _l2, _r2, cols2, start2, cur2, end2, eps2, frontier2,
+         fpidx2, ftrig2, need2) = view2
 
-        # readahead budget: K plan pages per scan, split across its columns
-        # in proportion to page density (the engine's next-K-plan-pages)
+        # request set = the engine's plan window: the blocking page (the
+        # trigger the cursor sits on) plus the next ~K *plan entries* in
+        # (trigger, column, page) order.  Crucially a far-trigger frontier
+        # page (a sparse column whose next boundary is many dense-pages
+        # ahead) is NOT demanded early: the engine only requests it once it
+        # enters the plan window.  Early fetches age out of a small pool
+        # and reload — churn the engine does not have.
         inv_tpp = 1.0 / col_tpp[None, :]
         dens = jnp.sum(jnp.where(need2, inv_tpp, 0.0), axis=1, keepdims=True)
-        depth_dens = jnp.maximum(
-            jnp.round(K * inv_tpp / jnp.maximum(dens, 1e-30)), 1.0
-        )
-        # calibrated against the event engine: LRU tracks best with the
-        # density split of the plan-order readahead; PBM with a shallow
-        # uniform depth (deep readahead lands in far-future buckets and
-        # thrashes at small pools more than the engine's request queue does)
-        if static_policy is None:
-            pol_depth = jnp.where(cfg.policy == 1, 1.0, depth_dens)
-        elif static_policy == "pbm":
-            pol_depth = 1.0
-        else:
-            pol_depth = depth_dens
-        depth = jnp.where(need2, pol_depth, 0.0).astype(jnp.int32)  # (S, C)
-        # one fused scatter for demand (k=0) + readahead (k=1..K_LOOP);
-        # per-column depth never exceeds ~K/2 on multi-column scans, so the
-        # scatter walks K_LOOP+1 slots instead of K+1
+        # one fused scatter over K_LOOP+1 plan-window slots per (stream,
+        # column); K_LOOP bounds the per-column scatter walk
         ks = jnp.arange(K_LOOP + 1)                    # (K_LOOP+1,)
-        pf_local = local2[:, :, None] + ks[None, None, :]
-        ok = (pf_local < col_npages[None, :, None]) & need2[:, :, None]
-        ok &= (ks[None, None, :] <= depth[:, :, None])
+        pf_local = frontier2[:, :, None] + ks[None, None, :]
+        exists = (pf_local < col_npages[None, :, None]) & need2[:, :, None]
         pf_pidx = col_start[None, :, None] + jnp.minimum(
             pf_local, col_npages[None, :, None] - 1
         )
-        ok &= page_first[pf_pidx] < end2[:, None, None]
-        kb = jnp.where(ks == 0, 31, jnp.clip(K_LOOP + 1 - ks, 1, 30))
-        okd = ok.at[:, :, 0].set(demand)               # k=0 slot: demand only
-        bonus = jnp.full(P, -1, jnp.int32).at[pf_pidx].max(
-            jnp.where(okd, kb[None, None, :], -1)
+        pf_trig = jnp.maximum(page_first[pf_pidx], start2[:, None, None])
+        exists &= page_first[pf_pidx] < end2[:, None, None]
+        # the engine prefetches the next K *plan entries* — an entry-COUNT
+        # window over the (trigger, column, page) plan order, resident
+        # entries included in the budget.  The count cut matters: it can
+        # leave a same-trigger group partner just outside the window, to be
+        # discovered only at the next wake (see the request gate below) —
+        # the separation behind the engine's small-pool churn.
+        e_trig = jnp.where(exists, pf_trig, INF)
+        flat_trig = e_trig.reshape(S, C * (K_LOOP + 1))
+        flat_ord = jnp.argsort(jnp.argsort(flat_trig, axis=1), axis=1)
+        # argsort twice = rank in the plan order; jnp.argsort is stable, so
+        # ties resolve by (column, page) flat position — the engine's plan
+        # sort key (trigger, column, index)
+        rank = flat_ord.reshape(S, C, K_LOOP + 1)
+        # the k=0 slot (the frontier itself) is always requested once its
+        # trigger reaches the cursor — the blocking demand — even with
+        # prefetch disabled
+        blocking = (ks[None, None, :] == 0) & (
+            pf_trig <= (cur2 + eps2)[:, None, None]
         )
-        wanted = (bonus >= 0) & ~state.resident & page_valid
-        # FIFO service order, array-form: every page keeps the step at which
-        # it was first requested (demand or readahead) and the I/O server
-        # grants oldest requests first — the engine's request queue without
-        # the queue.  Stamps clear when the page loads or loses all waiters.
+        # request cadence gate, engine parity: a scan issues requests only
+        # while it runs (burst ends) and at the instant it blocks — a
+        # blocked scan's window is FROZEN until its demand loads.  Pages
+        # entering the window mid-wait are not requested until the wake,
+        # which is what separates group partners into distant queue
+        # positions (continuous re-wanting erased that separation and with
+        # it most of the engine's small-pool churn).
+        ug = _u01(jnp.arange(S, dtype=jnp.uint32), state.steps,
+                  3266489917, idx_mult=2246822519)
+        # the engine's refresh rate follows its wake rate, which rises
+        # with I/O pressure: scale by the lifetime duty cycle (a stalled
+        # scan wakes per demand load ~= often; a CPU-bound scan re-issues
+        # only per burst, where the continuous window already covers it)
+        duty_g = jnp.clip(
+            (state.consumed / jnp.maximum(state.t, 1e-9))
+            / jnp.maximum(rate, 1.0),
+            0.0, 1.0,
+        )
+        gate_p = _GATE_P * (1.0 - duty_g)
+        gate = (
+            (adv > 0.0) | (state.steps == 0) | finished | (ug < gate_p)
+        )
+        # calibrated per policy: the engine's 8-entry window underfeeds the
+        # array LRU at deep thrash (its requests are colder); a slightly
+        # wider LRU window restores the engine's churn level
+        if static_policy is None:
+            k_win = jnp.where(cfg.policy == 1, K, K + 2)
+        elif static_policy == "pbm":
+            k_win = K
+        else:
+            k_win = K + 2
+        # the blocking demand is exempt from the gate: the engine requests
+        # the page it blocks on unconditionally, and a frontier page that
+        # was resident at the block transition but evicted during the wait
+        # would otherwise stall for a geometric number of steps before its
+        # demand is even queued
+        ok = exists & (((rank <= k_win) & gate[:, None, None]) | blocking)
+        kb = jnp.where(ks == 0, 31, jnp.clip(K_LOOP + 1 - ks, 1, 30))
+        bonus = jnp.full(P, -1, jnp.int32).at[pf_pidx].max(
+            jnp.where(ok, kb[None, None, :], -1)
+        )
+        in_plan_window = (bonus >= 0) & ~state.resident & page_valid
+        # FIFO request queue, array-form: every page keeps the step at which
+        # it was first requested, and — engine parity — the request STAYS
+        # queued after the cursor's plan window moves past it: the engine
+        # only drops an entry when the page loads or the requesting query
+        # ends.  Those stale early fetches (served hundreds of grants after
+        # they were issued, evicted before their scan arrives, re-requested)
+        # are most of the engine's small-pool churn; forgetting them made
+        # the array 15-25% too fast below 20% buffer.  The array clears
+        # stamps on load, and at each slice refresh for pages no active
+        # scan is interested in (the query-end drop, slice-quantised).
+        wanted = in_plan_window | (
+            (state.req_step != _REQ_NONE) & ~state.resident & page_valid
+        )
         req_step2 = jnp.where(
             wanted, jnp.minimum(state.req_step, state.steps + 1), _REQ_NONE
         )
-        # int key (f32 would round away the bonus): older request -> larger
-        load_key = jnp.where(wanted, (_REQ_NONE - req_step2) * 32 + bonus, -1)
+        # strict FIFO by first-wanted step (engine parity: a demand request
+        # does NOT jump ahead of older readahead in the serial queue).
+        # Ties within one step's cohort resolve by a hash fixed at stamp
+        # time — the engine's enqueue order is equally arbitrary, but a
+        # deterministic page-index order would serve the same streams first
+        # every cohort and freeze fine phase alignments between overlapping
+        # scans that the event engine's noise dissolves.  The bonus only
+        # defines membership of the wanted set, not the service order.
+        stamp_age = jnp.clip(state.steps + 1 - req_step2, 0, 32767)
+        # within-cohort service order: the engine enqueues a woken scan's
+        # whole window CONTIGUOUSLY (one event = adjacent queue slots), and
+        # the order of scans within one array step is event-timing noise.
+        # So the cohort rank is (stream hash, plan rank) — a per-stream
+        # block — fixed at stamp time like the engine's queue position.
+        s_ord = (512.0 * _u01(jnp.arange(S, dtype=jnp.uint32),
+                              state.steps, 40503)).astype(jnp.int32)
+        slot = s_ord[:, None, None] * 64 + jnp.clip(rank, 0, 63)
+        tie_now = jnp.full(P, 32767, jnp.int32).at[pf_pidx].min(
+            jnp.where(ok, slot, 32767)
+        )
+        new_stamp = wanted & (state.req_step == _REQ_NONE)
+        req_tie2 = jnp.where(new_stamp, tie_now, state.req_tie)
+        tie_blk = 32767 - req_tie2
+        tie_idx = 32767 - jnp.arange(P, dtype=jnp.int32)
+        # calibrated per policy: LRU tracks the engine best with the
+        # stream-block cohort order; PBM with the plan-deterministic index
+        # order (its bucket estimates already absorb the noise)
+        if static_policy is None:
+            tie15 = jnp.where(cfg.policy == 1, tie_idx, tie_blk)
+        elif static_policy == "pbm":
+            tie15 = tie_idx
+        else:
+            tie15 = tie_blk
+        load_key = jnp.where(wanted, stamp_age * 32768 + tie15, -1)
 
         # ================= I/O server: budgeted admission =================
         used = jnp.sum(page_size * state.resident)
         free = cfg.capacity_bytes - used
-        # engine parity: pages are pinned only while a scan actually runs a
-        # CPU burst over them — a blocked scan pins nothing (otherwise a
-        # pool smaller than the union of current column sets livelocks)
-        blocked2 = jnp.any(need2 & ~res2, axis=1)
-        pin = jnp.zeros(P, jnp.int32).at[pidx2].max(
-            (need2 & res2 & ~blocked2[:, None]).astype(jnp.int32)
+        # engine parity: a running scan pins the pages of its current CPU
+        # burst — the last ~segment_pages plan entries behind the cursor —
+        # for the burst's duration; a blocked scan pins nothing, so pools
+        # far below streams x columns pages cannot livelock.  The array
+        # analogue pins pages whose trigger lies within a segment length
+        # (segment_pages plan entries ~= seg/dens tuples) behind the cursor
+        # of a stream that advanced this step.
+        seg_len = _SEG_PAGES / jnp.maximum(dens[:, 0], 1e-30)  # (S,) tuples
+        bk = jnp.arange(_SEG_WIN)                           # (B,)
+        b_local = frontier2[:, :, None] - 1 - bk[None, None, :]
+        b_pidx = col_start[None, :, None] + jnp.clip(
+            b_local, 0, col_npages[None, :, None] - 1
         )
+        b_trig = jnp.maximum(page_first[b_pidx], start2[:, None, None])
+        burst = (
+            (b_local >= 0)
+            & (cols2 & active2[:, None])[:, :, None]
+            & runnable[:, None, None]
+            & (b_trig >= (cur2 - seg_len)[:, None, None])
+        )
+        pin = jnp.zeros(P, jnp.int32).at[b_pidx].max(burst.astype(jnp.int32))
         evictable = state.resident & (pin == 0) & page_valid
         evictable_bytes = jnp.sum(page_size * evictable)
         headroom = free + evictable_bytes
@@ -361,18 +607,43 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         load_bytes = taken
         n_load = jnp.sum(cand_ok)
 
+        # bank leftover credit instead of zeroing it whenever the request
+        # queue went momentarily empty — that dropped the partially-funded
+        # head-of-line load and made effective bandwidth dip below
+        # cfg.bandwidth on bursty workloads.  The cap stays at 4 pages
+        # while requests remain unserved (funding the next grants); with an
+        # empty queue one page-time is kept, compensating the idle server's
+        # ability to start a load the instant a request arrives mid-step
+        # (the engine's serial server never banks more idle time than that).
         leftover = credit - load_bytes
         starved_io = jnp.sum(wanted & ~load_mask) > 0
-        io_credit2 = jnp.where(
-            starved_io, jnp.minimum(leftover, 4 * max_page), 0.0
+        credit_cap = jnp.where(starved_io, 4 * max_page, max_page)
+        io_credit2 = jnp.minimum(leftover, credit_cap)
+
+        # engine speed-estimate DIPS: the dict engine's per-burst EWMA
+        # crashes toward the effective rate at every stall exit, and pages
+        # pushed during a dip land in far-future buckets — prime eviction
+        # victims although their consumption is imminent.  That mis-push
+        # churn (7% of engine loads at 40% buffer, ~20% at 10%) never
+        # happens with a smooth estimate, leaving the array faster than
+        # the machine it models.  Sample the dips per (stream, step).
+        ud = _u01(jnp.arange(S, dtype=jnp.uint32), state.steps, 3266489917)
+        eff_rate = jnp.clip(
+            state.consumed / jnp.maximum(state.t, 1e-9),
+            1.0, None,
+        )
+        speed_push = jnp.where(
+            ud < _DIP_P, jnp.minimum(_DIP_DEPTH * eff_rate, speed2), speed2
         )
 
         # ================= PBM bookkeeping ================================
         if refresh:
-            # slice boundary: full PageNextConsumption recompute, bucket
+            # slice boundary: full PageNextConsumption recompute (trigger-
+            # granular: consumed pages drop out per column), bucket
             # transitions, and one timeline shift with spill re-bucketing
             eta = next_consumption(page_first, page_last, page_col, cols2,
-                                   cur2, end2, speed2, active2)
+                                   cur2, end2, speed_push, active2,
+                                   scan_start=start2, eps=eps2)
             b_target = target_buckets(eta, time_slice_f, spec.n_groups, m,
                                       page_valid)
             interested = (eta < BIG_CUT) & page_valid
@@ -383,28 +654,35 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             bucket_pre = jnp.where(
                 ~interested, NR, jnp.where(assign, b_target, state.bucket)
             ).astype(jnp.int32)
+            # query-end request drop, slice-quantised: pending requests for
+            # pages no active scan is interested in leave the queue
+            req_step2 = jnp.where(interested, req_step2, _REQ_NONE)
             k_shift = jnp.int32(1)
             time_passed2 = state.time_passed + 1
         else:
-            # within a slice the timeline is static: bucket just-loaded
-            # pages individually and mark pages entering consumption
-            eta_c = next_consumption(
-                page_first[cand], page_last[cand], page_col[cand],
-                cols2, cur2, end2, speed2, active2,
+            # within a slice the timeline is static except for the pages
+            # that just changed estimate: the loads of this step and the
+            # triggers just crossed (the dict impl re-pushes a page on
+            # every load and consume event) — one fused gather/scatter
+            upd = jnp.concatenate([cand, cross_pidx.reshape(-1)])
+            upd_on = jnp.concatenate([cand_ok, crossed.reshape(-1)])
+            eta_u = next_consumption(
+                page_first[upd], page_last[upd], page_col[upd],
+                cols2, cur2, end2, speed_push, active2,
+                scan_start=start2, eps=eps2,
             )
-            b_c = target_buckets(
-                eta_c, time_slice_f, spec.n_groups, m,
-                jnp.ones(cand.shape[0], bool),
+            b_u = target_buckets(
+                eta_u, time_slice_f, spec.n_groups, m,
+                jnp.ones(upd.shape[0], bool),
             )
-            bucket_pre = state.bucket.at[cand].set(
-                jnp.where(cand_ok, b_c, state.bucket[cand])
+            # combining (min) scatter with an NR+1 sentinel for off entries:
+            # duplicate ON entries of one page carry identical b_u (eta is a
+            # function of the page alone), so the result is deterministic
+            # even when a page appears both on and off in ``upd``
+            new_b = jnp.full(P, NR + 1, jnp.int32).at[upd].min(
+                jnp.where(upd_on, b_u, NR + 1)
             )
-            # pages under an active cursor are imminent: bucket 0 (the dict
-            # impl pushes them with eta 0 on every consume event)
-            bucket_pre = bucket_pre.at[pidx2].min(
-                jnp.where(need2 & res2, 0, NR + 1)
-            )
-            bucket_pre = jnp.minimum(bucket_pre, NR)
+            bucket_pre = jnp.where(new_b <= NR, new_b, state.bucket)
             b_target = bucket_pre                      # no spill when k=0
             k_shift = jnp.int32(0)
             time_passed2 = state.time_passed
@@ -424,7 +702,13 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         )
 
         resident2 = (state.resident & ~evict) | load_mask
-        last_used3 = jnp.where(load_mask, t2, last_used2)
+        last_used3 = jnp.where(load_mask, t2 + jit_p, last_used2)
+        # churn diagnostic: a page evicted while still "fresh" (loaded but
+        # never consumed since) was a wasted load
+        was_crossed = jnp.zeros(P, bool).at[cross_pidx].max(crossed)
+        fresh2 = jnp.where(load_mask, True,
+                           state.fresh & ~was_crossed & resident2)
+        churn2 = state.churn + jnp.sum(state.fresh & evict & ~was_crossed)
         req_step3 = jnp.where(load_mask, _REQ_NONE, req_step2)
 
         new_state = SimState(
@@ -432,9 +716,13 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             last_used=last_used3,
             bucket=bucket_out,
             req_step=req_step3,
+            req_tie=req_tie2,
+            fresh=fresh2,
             qidx=qidx2,
             pos=pos2,
             speed=speed2,
+            consumed=consumed2,
+            consumed_ref=consumed_ref2,
             stream_done_t=stream_done_t2,
             t=t2,
             steps=state.steps + 1,
@@ -442,6 +730,10 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             io_credit=io_credit2,
             io_bytes=state.io_bytes + load_bytes,
             loads=state.loads + n_load,
+            loads_demand=state.loads_demand + jnp.sum(
+                load_mask & (bonus == 31)
+            ),
+            churn=churn2,
         )
         return new_state, view2
 
@@ -505,10 +797,18 @@ def make_runner(
 
 def result_from_state(state: SimState, policy, sim_wall: float = 0.0,
                       ) -> ArrayResult:
-    """Convert a finished (device) state into an :class:`ArrayResult`."""
+    """Convert a finished (device) state into an :class:`ArrayResult`.
+
+    A run cut short by the ``max_time``/``max_slices`` livelock guard is
+    NOT silently reported as complete: unfinished streams still contribute
+    ``t_end`` to ``stream_times`` (a lower bound), but the result carries
+    ``extras["truncated"] = True`` plus the unfinished-stream count so
+    harnesses can refuse to compare it against a finished event run.
+    """
     done_t = np.asarray(state.stream_done_t, np.float64)
     t_end = float(state.t)
     stream_times = [d if d >= 0 else t_end for d in done_t]
+    unfinished = int(np.sum(done_t < 0))
     name = _POLICY_NAMES.get(int(policy), str(policy)) \
         if not isinstance(policy, str) else policy
     return ArrayResult(
@@ -519,6 +819,12 @@ def result_from_state(state: SimState, policy, sim_wall: float = 0.0,
         sim_time=t_end,
         steps=int(state.steps),
         wall_s=sim_wall,
+        extras={
+            "truncated": unfinished > 0,
+            "unfinished_streams": unfinished,
+            "churn_loads": int(state.churn),
+            "demand_loads": int(state.loads_demand),
+        },
     )
 
 
@@ -531,11 +837,14 @@ def run_workload_array(
     bandwidth: float = 700e6,
     time_slice: float = 0.1,
     prefetch_pages: int = 8,
+    max_time: float = 3e5,
     spec: Optional[SimSpec] = None,
     runner=None,
 ) -> ArrayResult:
     """Array-backend counterpart of ``repro.core.run_workload`` for the
-    LRU / PBM policies (CScan and OPT stay on the event engine)."""
+    LRU / PBM policies (CScan and OPT stay on the event engine).  Check
+    ``result.extras["truncated"]`` when lowering ``max_time``: a run cut
+    short by the livelock guard reports lower bounds, not results."""
     import time
 
     if spec is None:
@@ -544,7 +853,8 @@ def run_workload_array(
         runner = make_runner(spec, bandwidth_ref=bandwidth,
                              time_slice=time_slice,
                              prefetch_pages=prefetch_pages)
-    cfg = make_config(spec, capacity_bytes, bandwidth, policy_name)
+    cfg = make_config(spec, capacity_bytes, bandwidth, policy_name,
+                      max_time=max_time)
     t0 = time.time()
     state = jax.block_until_ready(runner(cfg))
     return result_from_state(state, policy_name, sim_wall=time.time() - t0)

@@ -73,6 +73,23 @@ class SimSpec(NamedTuple):
         """Bucket sentinel for resident pages no active scan wants."""
         return self.nb
 
+    @property
+    def max_rate(self) -> float:
+        """Fastest CPU consumption rate of any query (tuples/sec)."""
+        return float(np.max(self.q_rate))
+
+    @property
+    def min_tpp(self) -> float:
+        """Fewest tuples per page of any column — the densest page grid."""
+        return float(np.min(self.col_tpp))
+
+    def trigger_window(self, dt: float) -> int:
+        """Static per-column page-trigger lookahead for one step of length
+        ``dt``: the most page boundaries the fastest scan can cross in the
+        densest column, plus one so the conservative advance cap
+        (``W``-th trigger) never throttles an unblocked scan."""
+        return int(np.ceil(1.1 * self.max_rate * float(dt) / self.min_tpp)) + 1
+
 
 def build_spec(
     db: Database,
@@ -96,6 +113,12 @@ def build_spec(
     off = 0
     for ci, cname in enumerate(col_names):
         col = table.columns[cname]
+        if not col.pages:
+            raise ValueError(
+                f"column {table.name}.{cname} has zero pages; every column "
+                "needs at least one page to define its tuples-per-page grid "
+                "(re-run Column.build_pages or drop the column)"
+            )
         col_start[ci] = off
         col_npages[ci] = len(col.pages)
         col_tpp[ci] = col.n_tuples / len(col.pages)

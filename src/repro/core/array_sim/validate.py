@@ -1,24 +1,41 @@
 """Cross-validation harness: array backend vs the discrete-event engine.
 
 Runs the same scaled microbenchmark workload through both simulators and
-reports, per policy, the relative error of the two paper metrics (average
-stream time and total I/O volume).  The array backend is a discretised
-fluid approximation of the event engine, so small deviations are expected;
-the acceptance bar for this repo is 10% on the default operating point
-(buffer = 40% of the accessed working set, 700 MB/s, 8 streams — the
-quick-pass configuration of ``benchmarks/microbench.py``).
+reports, per (buffer point, policy), the relative error of the two paper
+metrics (average stream time and total I/O volume).  The array backend is
+a discretised fluid approximation of the event engine, so small deviations
+are expected; the acceptance envelope of this repo is the paper's small-
+buffer operating range:
+
+* ``buffer_frac`` 0.1, 0.2 and 0.4 of the accessed working set (700 MB/s,
+  8 streams, quick-pass scale — the configuration of
+  ``benchmarks/microbench.py``),
+* <= 10% relative error on both metrics for PBM at every point and for
+  LRU at 0.2 / 0.4,
+* <= 13% for LRU at the 0.1 deep-thrash point — the event engine
+  supersaturates there (its loads exceed one load per page consumption:
+  sharing collapses entirely while ~23% of loads are evicted before
+  first use), and the fluid step reproduces that churn spiral only
+  partially; the residual is documented in the README.
+
+A truncated array run (``max_time``/``max_slices`` livelock guard) is a
+hard error: :func:`cross_validate` raises instead of comparing a lower
+bound against a finished event run.
 
 Usage::
 
-    PYTHONPATH=src python -m repro.core.array_sim.validate           # default point
+    PYTHONPATH=src python -m repro.core.array_sim.validate            # 3-point sweep
+    PYTHONPATH=src python -m repro.core.array_sim.validate --buffer-frac 0.4
     PYTHONPATH=src python -m repro.core.array_sim.validate --scale 0.1
 
-Also consumed by ``tests/test_array_sim.py``.
+Exits non-zero when a point misses its error bar.  Also consumed by
+``tests/test_array_sim.py``.
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -26,6 +43,17 @@ from ..engine import EngineConfig, run_workload
 from ..workload import make_lineitem_db, micro_accessed_bytes, micro_streams
 from .sim import make_runner, run_workload_array
 from .spec import build_spec
+
+#: validated operating envelope (buffer_frac, policy) -> max |rel err|
+ERROR_BARS = {
+    (0.1, "lru"): 0.13,    # engine churn spiral, partially reproduced
+    (0.1, "pbm"): 0.10,
+    (0.2, "lru"): 0.10,
+    (0.2, "pbm"): 0.10,
+    (0.4, "lru"): 0.10,
+    (0.4, "pbm"): 0.10,
+}
+DEFAULT_FRACS = (0.1, 0.2, 0.4)
 
 
 def cross_validate(
@@ -37,17 +65,27 @@ def cross_validate(
     bandwidth: float = 700e6,
     policies: Sequence[str] = ("lru", "pbm"),
     time_slice: Optional[float] = None,
+    _shared=None,
 ) -> List[Dict]:
     """Run event + array backends on one microbenchmark point; return one
-    row per policy with both results and their relative differences."""
+    row per policy with both results and their relative differences.
+
+    Raises ``RuntimeError`` if the array run was truncated by the livelock
+    guard — a truncated run reports lower bounds, not results.
+    """
     if time_slice is None:
         time_slice = 0.1 * scale  # microbench convention
-    db = make_lineitem_db(scale_tuples=int(180_000_000 * scale))
-    ws = micro_accessed_bytes(db)
-    streams = micro_streams(db, n_streams=n_streams,
-                            queries_per_stream=queries_per_stream, seed=seed)
+    if _shared is None:
+        db = make_lineitem_db(scale_tuples=int(180_000_000 * scale))
+        ws = micro_accessed_bytes(db)
+        streams = micro_streams(db, n_streams=n_streams,
+                                queries_per_stream=queries_per_stream,
+                                seed=seed)
+        spec = build_spec(db, streams)
+        runners = {}
+    else:
+        db, ws, streams, spec, runners = _shared
     cap = max(1 << 22, int(buffer_frac * ws))
-    spec = build_spec(db, streams)
 
     rows: List[Dict] = []
     for pol in policies:
@@ -56,12 +94,22 @@ def cross_validate(
         t0 = time.time()
         ev = run_workload(db, streams, pol, cfg)
         ev_wall = time.time() - t0
-        runner = make_runner(spec, bandwidth_ref=bandwidth,
-                             time_slice=time_slice, static_policy=pol)
+        if pol not in runners:
+            runners[pol] = make_runner(spec, bandwidth_ref=bandwidth,
+                                       time_slice=time_slice,
+                                       static_policy=pol)
         ar = run_workload_array(
             db, streams, pol, capacity_bytes=cap, bandwidth=bandwidth,
-            time_slice=time_slice, spec=spec, runner=runner,
+            time_slice=time_slice, spec=spec, runner=runners[pol],
         )
+        if ar.extras.get("truncated"):
+            raise RuntimeError(
+                f"array run truncated by the livelock guard at "
+                f"buffer_frac={buffer_frac} policy={pol} "
+                f"({ar.extras['unfinished_streams']} unfinished streams "
+                f"after {ar.sim_time:.1f}s sim time) — refusing to compare "
+                "a lower bound against a finished event run"
+            )
         rows.append({
             "policy": pol,
             "buffer_frac": buffer_frac,
@@ -75,32 +123,69 @@ def cross_validate(
             "event_wall_s": round(ev_wall, 3),
             "array_wall_s": round(ar.wall_s, 3),
             "array_steps": ar.steps,
+            "truncated": ar.extras.get("truncated", False),
+            "array_churn_loads": ar.extras.get("churn_loads", 0),
         })
+    return rows
+
+
+def cross_validate_sweep(
+    fracs: Sequence[float] = DEFAULT_FRACS,
+    scale: float = 0.25,
+    **kw,
+) -> List[Dict]:
+    """:func:`cross_validate` over several buffer points, reusing the
+    workload, spec, and compiled runners across points (capacity is a
+    traced config scalar, so one runner serves the whole sweep)."""
+    db = make_lineitem_db(scale_tuples=int(180_000_000 * scale))
+    ws = micro_accessed_bytes(db)
+    streams = micro_streams(db, n_streams=kw.get("n_streams", 8),
+                            queries_per_stream=kw.get("queries_per_stream", 16),
+                            seed=kw.get("seed", 3))
+    spec = build_spec(db, streams)
+    shared = (db, ws, streams, spec, {})
+    rows: List[Dict] = []
+    for f in fracs:
+        rows.extend(cross_validate(scale=scale, buffer_frac=f,
+                                   _shared=shared, **kw))
     return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", type=float, default=0.25)
-    ap.add_argument("--buffer-frac", type=float, default=0.4)
+    ap.add_argument("--buffer-frac", type=float, default=None,
+                    help="single point; default sweeps 0.1, 0.2, 0.4")
     ap.add_argument("--streams", type=int, default=8)
     ap.add_argument("--queries", type=int, default=16)
     ap.add_argument("--seed", type=int, default=3)
     args = ap.parse_args()
-    rows = cross_validate(
-        scale=args.scale, n_streams=args.streams,
+    fracs = [args.buffer_frac] if args.buffer_frac is not None else \
+        list(DEFAULT_FRACS)
+    rows = cross_validate_sweep(
+        fracs=fracs, scale=args.scale, n_streams=args.streams,
         queries_per_stream=args.queries, seed=args.seed,
-        buffer_frac=args.buffer_frac,
     )
+    failed = 0
     for r in rows:
+        bar = ERROR_BARS.get((r["buffer_frac"], r["policy"]), 0.10)
+        worst = max(abs(r["stream_time_rel_err"]), abs(r["io_rel_err"]))
+        ok = worst <= bar
+        failed += 0 if ok else 1
         print(
-            f"{r['policy']:4s} stream_time: event={r['event_stream_time_s']:.2f}s "
+            f"buf={r['buffer_frac']:<4} {r['policy']:4s} "
+            f"stream_time: event={r['event_stream_time_s']:.2f}s "
             f"array={r['array_stream_time_s']:.2f}s "
             f"({r['stream_time_rel_err']*100:+.1f}%) | io: "
             f"event={r['event_io_gb']:.3f}GB array={r['array_io_gb']:.3f}GB "
             f"({r['io_rel_err']*100:+.1f}%) | wall event={r['event_wall_s']:.2f}s "
-            f"array={r['array_wall_s']:.2f}s"
+            f"array={r['array_wall_s']:.2f}s | "
+            f"{'OK' if ok else f'FAIL (bar {bar:.0%})'}"
         )
+    if failed:
+        print(f"{failed} point(s) outside the validated envelope",
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -65,8 +65,14 @@ def _kernel(iscal_ref, fscal_ref, bucket_ref, b_target_ref, last_used_ref,
     # ---- eviction key ----------------------------------------------------
     ev = evictable_ref[:]             # (1, P) f32 0/1
     age = jnp.maximum(now - last_used_ref[:], 0.0)
-    idxf = jax.lax.broadcasted_iota(jnp.float32, (1, P), 1)
-    tb = jnp.where(bucket2 == nb, age / (age + 1.0), (P - idxf) / (P + 1.0))
+    # requested-bucket tie-break: per-(page, call) hash, not page index —
+    # a fixed index order would keep the same elite resident every call
+    # (see pbm_timeline_step_ref)
+    idxi = jax.lax.broadcasted_iota(jnp.uint32, (1, P), 1)
+    seed = jax.lax.bitcast_convert_type(now + 1.0, jnp.uint32)
+    h32 = idxi * jnp.uint32(2654435761) + seed * jnp.uint32(40503)
+    tie = (h32 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+    tb = jnp.where(bucket2 == nb, age / (age + 1.0), tie)
     key_pbm = bucket2.astype(jnp.float32) + 0.5 * tb
     key = jnp.where(policy == 1, key_pbm, age)
     key = jnp.where(ev > 0, key, NEG)

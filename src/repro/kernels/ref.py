@@ -140,11 +140,19 @@ def pbm_timeline_step_ref(
     bucket2 = jax.lax.fori_loop(0, jnp.maximum(k, 0), shift_once, bucket)
 
     age = jnp.maximum(now - last_used, 0.0)
-    idx = jnp.arange(P, dtype=jnp.float32)
     # composite PBM key: bucket level dominates; not-requested (== nb) is
     # the top level with LRU order inside; requested buckets break ties by
-    # page index (the dict impl's insertion order is equally arbitrary).
-    tb = jnp.where(bucket2 == nb, age / (age + 1.0), (P - idx) / (P + 1.0))
+    # a per-(page, call) hash (the dict impl's insertion order is equally
+    # arbitrary, but a FIXED index order would carve a stable always-kept
+    # elite out of every bucket — systematic retention the dict engine's
+    # churning insertion order never develops).
+    idxi = jnp.arange(P, dtype=jnp.uint32)
+    seed = jax.lax.bitcast_convert_type(
+        jnp.float32(now) + 1.0, jnp.uint32
+    ).astype(jnp.uint32)
+    h32 = idxi * jnp.uint32(2654435761) + seed * jnp.uint32(40503)
+    tie = (h32 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+    tb = jnp.where(bucket2 == nb, age / (age + 1.0), tie)
     key_pbm = bucket2.astype(jnp.float32) + 0.5 * tb
     key = jnp.where(policy == 1, key_pbm, age)
     key = jnp.where(evictable, key, -jnp.inf)
