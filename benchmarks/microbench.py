@@ -265,21 +265,31 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sweep", choices=["buffer", "bandwidth", "streams", "all"],
                     default="all")
-    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--scale", type=float, default=None,
+                    help="table-size scale (default 1.0; 0.25 under --smoke)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: quick scale, buffer sweep only (same "
+                         "semantics as benchmarks/run.py --smoke)")
     ap.add_argument("--extended", action="store_true")
     ap.add_argument("--backend", choices=["event", "array"], default="event")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    sweeps = ["buffer", "bandwidth", "streams"] if args.sweep == "all" else [args.sweep]
+    scale = args.scale if args.scale is not None else (
+        0.25 if args.smoke else 1.0)
+    if args.smoke:
+        sweeps = ["buffer"]
+    else:
+        sweeps = (["buffer", "bandwidth", "streams"]
+                  if args.sweep == "all" else [args.sweep])
     rows = []
     if args.backend == "array":
         for s in sweeps:
-            rows.extend(sweep_array(s, ARRAY_POLICIES, scale=args.scale))
-        batched_buffer_race(scale=args.scale)
+            rows.extend(sweep_array(s, ARRAY_POLICIES, scale=scale))
+        batched_buffer_race(scale=scale)
     else:
         policies = POLICIES + (EXTENDED if args.extended else [])
         for s in sweeps:
-            rows.extend(sweep(s, policies, scale=args.scale))
+            rows.extend(sweep(s, policies, scale=scale))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=2)

@@ -3,6 +3,13 @@
 8 tables / 61 columns, 22 query templates per stream (qgen-style rotated
 permutations), ~7.5GB accessed with 8 streams.  Defaults match the paper's
 operating point: 600 MB/s I/O, buffer = 30% of accessed volume.
+
+``--backend=array`` lowers the multi-table workload through
+``repro.core.array_sim.compiler`` and runs LRU/PBM on the vmap-able array
+substrate: every (policy x sweep-point) lane of a sweep executes as ONE
+batched computation (CScan/OPT stay on the event engine).  ``--smoke``
+restricts to the buffer sweep at a quick scale — the CI configuration
+(same flag semantics as ``benchmarks/microbench.py``).
 """
 
 from __future__ import annotations
@@ -16,20 +23,40 @@ from repro.core import EngineConfig, run_workload, simulate_belady
 from repro.core.workload import make_tpch_db, tpch_accessed_bytes, tpch_streams
 
 POLICIES = ["lru", "cscan", "pbm", "opt"]
+ARRAY_POLICIES = ["lru", "pbm"]  # cscan/opt stay on the event engine
 
 DEFAULTS = dict(n_streams=8, bandwidth=600e6, buffer_frac=0.3, seed=7)
+#: --smoke scale per backend.  The array smoke runs at 0.05 (the batched
+#: step's CPU cost bounds CI); the EVENT smoke stays at CI's historical
+#: 0.25 — at 0.05 the 10%-buffer point drops the pool (~75 pages) below
+#: streams x columns x prefetch wanted pages and the dict engine's churn
+#: spiral turns a smoke run into tens of minutes.  The array step handles
+#: that regime (it finishes the 0.1 lane in ~20s of sim time), which is
+#: exactly the asymmetry the batched substrate exists for.
+SMOKE_SCALE = 0.05
+EVENT_SMOKE_SCALE = 0.25
+
+SWEEP_POINTS = {
+    "buffer": [0.1, 0.2, 0.3, 0.45, 0.6, 0.8],
+    "bandwidth": [200e6, 400e6, 600e6, 900e6, 1200e6, 1600e6],
+    "streams": [1, 2, 4, 8, 16, 24],
+}
 
 
 def one_point(db, policies, *, n_streams, bandwidth, buffer_frac, seed,
               time_slice=0.1) -> List[Dict]:
     streams = tpch_streams(db, n_streams=n_streams, seed=seed)
     ws = tpch_accessed_bytes(db, streams)
+    # ONE capacity for the pool and the Belady replay: computing it twice
+    # (as the seed did) invites silent divergence between the run and its
+    # OPT reference when either expression drifts
+    cap = max(1 << 22, int(buffer_frac * ws))
     rows = []
     pbm_trace = None
     for pol in policies:
         cfg = EngineConfig(
             bandwidth=bandwidth,
-            buffer_bytes=max(1 << 22, int(buffer_frac * ws)),
+            buffer_bytes=cap,
             sample_interval=5.0,
             record_trace=(pol == "pbm"),
             pbm_time_slice=time_slice,
@@ -47,8 +74,7 @@ def one_point(db, policies, *, n_streams, bandwidth, buffer_frac, seed,
     if pbm_trace is not None and "opt" in policies:
         trace, sizes = pbm_trace
         _, missed = simulate_belady(
-            trace, page_sizes=sizes,
-            capacity_bytes=max(1 << 22, int(buffer_frac * ws)),
+            trace, page_sizes=sizes, capacity_bytes=cap,
         )
         for row in rows:
             if row["policy"] == "opt":
@@ -56,15 +82,15 @@ def one_point(db, policies, *, n_streams, bandwidth, buffer_frac, seed,
     return rows
 
 
+def _point_label(which: str, p) -> str:
+    return f"{p:.0%}" if which == "buffer" else (
+        f"{p/1e6:.0f}MB/s" if which == "bandwidth" else f"{int(p)} streams")
+
+
 def sweep(which: str, policies: List[str], scale: float = 1.0, seed: int = 7):
     db = make_tpch_db(scale=scale)
-    points = {
-        "buffer": [0.1, 0.2, 0.3, 0.45, 0.6, 0.8],
-        "bandwidth": [200e6, 400e6, 600e6, 900e6, 1200e6, 1600e6],
-        "streams": [1, 2, 4, 8, 16, 24],
-    }[which]
     out = []
-    for p in points:
+    for p in SWEEP_POINTS[which]:
         kw = dict(DEFAULTS)
         kw["seed"] = seed
         if which == "buffer":
@@ -73,32 +99,231 @@ def sweep(which: str, policies: List[str], scale: float = 1.0, seed: int = 7):
             kw["bandwidth"] = p
         else:
             kw["n_streams"] = int(p)
-        rows = one_point(db, policies, **kw)
+        # PBM bucket resolution scales with the (scaled) workload duration
+        # — the microbench convention (EngineConfig.pbm_time_slice: "scale
+        # it down together with the workload").  The seed ran scaled TPC-H
+        # sweeps at the fixed 0.1s slice, so scaled-run PBM rows (CI smoke
+        # included) shift once against pre-PR-3 trend baselines.
+        rows = one_point(db, policies, time_slice=0.1 * scale, **kw)
         for r in rows:
             r["sweep"] = f"tpch_{which}"
             r["point"] = p
         out.extend(rows)
-        label = f"{p:.0%}" if which == "buffer" else (
-            f"{p/1e6:.0f}MB/s" if which == "bandwidth" else f"{int(p)} streams")
         summary = " ".join(
             f"{r['policy']}={r['avg_stream_time_s']:.1f}s/{r['io_gb']:.1f}GB"
             for r in rows
         )
-        print(f"  tpch/{which} @ {label:10s} {summary}", flush=True)
+        print(f"  tpch/{which} @ {_point_label(which, p):10s} {summary}",
+              flush=True)
     return out
+
+
+def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7):
+    """Array-backend TPC-H sweep: same row schema as :func:`sweep` for the
+    LRU + PBM array policies.
+
+    For the buffer and bandwidth axes the workload shape is constant, so
+    the compiled spec is lowered once and EVERY (policy x point) lane runs
+    in one ``jax.vmap`` call — the generic runner treats policy, capacity
+    and bandwidth as traced config scalars.  The streams axis changes the
+    spec shape per point and falls back to per-point batched-policy runs.
+    """
+    import jax
+
+    from repro.core.array_sim import (
+        compile_workload, make_config, make_runner, result_from_state,
+        stack_configs,
+    )
+
+    policies = policies or ARRAY_POLICIES
+    db = make_tpch_db(scale=scale)
+    time_slice = 0.1 * scale
+    points = SWEEP_POINTS[which]
+    out: List[Dict] = []
+
+    def rows_from(states, lanes, batch_wall):
+        # wall_s is the batch wall amortised per lane — the lanes run
+        # LOCKSTEP inside one vmapped call, so no per-lane wall exists
+        # (unlike the sequential micro array rows); batch_wall_s/
+        # batch_lanes carry the real measurement
+        rows = []
+        for i, (p, pol) in enumerate(lanes):
+            r = result_from_state(
+                jax.tree.map(lambda x, i=i: x[i], states), pol)
+            rows.append({
+                "policy": pol,
+                "avg_stream_time_s": round(r.avg_stream_time, 3),
+                "io_gb": round(r.io_gb, 3),
+                "wall_s": round(batch_wall / max(1, len(lanes)), 2),
+                "batch_wall_s": round(batch_wall, 2),
+                "batch_lanes": len(lanes),
+                "sweep": f"tpch_{which}",
+                "point": p,
+                "backend": "array",
+                "truncated": r.extras.get("truncated", False),
+            })
+        return rows
+
+    if which in ("buffer", "bandwidth"):
+        streams = tpch_streams(db, n_streams=DEFAULTS["n_streams"], seed=seed)
+        ws = tpch_accessed_bytes(db, streams)
+        spec = compile_workload(db, streams)
+        runner = make_runner(spec, bandwidth_ref=DEFAULTS["bandwidth"],
+                             time_slice=time_slice)
+        lanes, cfgs = [], []
+        for p in points:
+            frac = p if which == "buffer" else DEFAULTS["buffer_frac"]
+            bw = p if which == "bandwidth" else DEFAULTS["bandwidth"]
+            cap = max(1 << 22, int(frac * ws))
+            for pol in policies:
+                lanes.append((p, pol))
+                cfgs.append(make_config(spec, cap, bw, pol))
+        t0 = time.time()
+        states = jax.block_until_ready(
+            jax.jit(jax.vmap(runner))(stack_configs(cfgs)))
+        wall = time.time() - t0
+        out = rows_from(states, lanes, wall)
+    else:
+        for p in points:
+            n_s = int(p)
+            streams = tpch_streams(db, n_streams=n_s, seed=seed)
+            ws = tpch_accessed_bytes(db, streams)
+            spec = compile_workload(db, streams)
+            runner = make_runner(spec, bandwidth_ref=DEFAULTS["bandwidth"],
+                                 time_slice=time_slice)
+            cap = max(1 << 22, int(DEFAULTS["buffer_frac"] * ws))
+            lanes = [(p, pol) for pol in policies]
+            cfgs = [make_config(spec, cap, DEFAULTS["bandwidth"], pol)
+                    for pol in policies]
+            t0 = time.time()
+            states = jax.block_until_ready(
+                jax.jit(jax.vmap(runner))(stack_configs(cfgs)))
+            wall = time.time() - t0
+            out.extend(rows_from(states, lanes, wall))
+
+    truncated = [(r["point"], r["policy"]) for r in out if r["truncated"]]
+    if truncated:
+        print(f"  tpch[array] WARNING: truncated lanes (livelock guard): "
+              f"{truncated}", flush=True)
+    for p in points:
+        rows = [r for r in out if r["point"] == p]
+        summary = " ".join(
+            f"{r['policy']}={r['avg_stream_time_s']:.1f}s/{r['io_gb']:.1f}GB"
+            for r in rows
+        )
+        print(f"  tpch[array]/{which} @ {_point_label(which, p):10s} "
+              f"{summary}", flush=True)
+    return out
+
+
+def batched_tpch_race(scale: float = 1.0, seed: int = 7, fracs=None,
+                      policy: str = "pbm"):
+    """One vmapped array run over a TPC-H policy x buffer sweep vs the same
+    points run sequentially on the event engine — the multi-table analogue
+    of ``microbench.batched_buffer_race``, tracked as a CI trend metric.
+    Returns the summary dict that lands in ``tpch_race.json``."""
+    import jax
+
+    from repro.core.array_sim import (
+        compile_workload, make_config, make_runner, result_from_state,
+        stack_configs,
+    )
+
+    db = make_tpch_db(scale=scale)
+    streams = tpch_streams(db, n_streams=DEFAULTS["n_streams"], seed=seed)
+    ws = tpch_accessed_bytes(db, streams)
+    time_slice = 0.1 * scale
+    spec = compile_workload(db, streams)
+    fracs = list(fracs) if fracs is not None else [0.1, 0.2, 0.3, 0.45]
+    caps = [max(1 << 22, int(f * ws)) for f in fracs]
+
+    t0 = time.time()
+    ev_rows = []
+    for cap in caps:
+        cfg = EngineConfig(bandwidth=DEFAULTS["bandwidth"], buffer_bytes=cap,
+                           sample_interval=5.0, pbm_time_slice=time_slice)
+        ev_rows.append(run_workload(db, streams, policy, cfg))
+    event_wall = time.time() - t0
+
+    runner = make_runner(spec, bandwidth_ref=DEFAULTS["bandwidth"],
+                         time_slice=time_slice, static_policy=policy,
+                         step_pages=2.0)
+    vrun = jax.jit(jax.vmap(runner))
+    cfgs = stack_configs([
+        make_config(spec, cap, DEFAULTS["bandwidth"], policy) for cap in caps
+    ])
+    t0 = time.time()
+    states = jax.block_until_ready(vrun(cfgs))
+    array_cold = time.time() - t0
+    t0 = time.time()
+    states = jax.block_until_ready(vrun(cfgs))
+    array_wall = time.time() - t0
+
+    results = [
+        result_from_state(jax.tree.map(lambda x, i=i: x[i], states), policy)
+        for i in range(len(fracs))
+    ]
+    truncated = [f for f, r in zip(fracs, results)
+                 if r.extras.get("truncated")]
+    if truncated:
+        print(f"  tpch batched sweep WARNING: truncated lanes (livelock "
+              f"guard) at buffer fracs {truncated} — race is invalid",
+              flush=True)
+    print(
+        f"  tpch batched sweep [{policy}, {len(fracs)} buffer points]: "
+        f"vmapped array = {array_wall:.2f}s (cold {array_cold:.2f}s incl. "
+        f"compile) vs sequential event engine = {event_wall:.2f}s "
+        f"-> {'array WINS' if array_wall < event_wall else 'event wins'} "
+        f"({event_wall / max(array_wall, 1e-9):.2f}x)",
+        flush=True,
+    )
+    return {
+        "workload": "tpch",
+        "policy": policy,
+        "fracs": list(fracs),
+        "array_vmapped_wall_s": round(array_wall, 3),
+        "array_cold_wall_s": round(array_cold, 3),
+        "event_sequential_wall_s": round(event_wall, 3),
+        "speedup": round(event_wall / max(array_wall, 1e-9), 3),
+        "truncated_fracs": truncated,
+        "array_avg_stream_time_s": [round(r.avg_stream_time, 3)
+                                    for r in results],
+        "event_avg_stream_time_s": [round(r.avg_stream_time, 3)
+                                    for r in ev_rows],
+    }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sweep", choices=["buffer", "bandwidth", "streams", "all"],
                     default="all")
-    ap.add_argument("--scale", type=float, default=1.0)
+    ap.add_argument("--scale", type=float, default=None,
+                    help=f"table-size scale (default 1.0; under --smoke: "
+                         f"{SMOKE_SCALE} array / {EVENT_SMOKE_SCALE} event)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: quick scale, buffer sweep only (same "
+                         "semantics as microbench.py --smoke)")
+    ap.add_argument("--backend", choices=["event", "array"], default="event")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    sweeps = ["buffer", "bandwidth", "streams"] if args.sweep == "all" else [args.sweep]
+    smoke_scale = SMOKE_SCALE if args.backend == "array" \
+        else EVENT_SMOKE_SCALE
+    scale = args.scale if args.scale is not None else (
+        smoke_scale if args.smoke else 1.0)
+    if args.smoke:
+        sweeps = ["buffer"]
+    else:
+        sweeps = (["buffer", "bandwidth", "streams"]
+                  if args.sweep == "all" else [args.sweep])
     rows = []
     for s in sweeps:
-        rows.extend(sweep(s, POLICIES, scale=args.scale))
+        if args.backend == "array":
+            rows.extend(sweep_array(s, ARRAY_POLICIES, scale=scale))
+        else:
+            rows.extend(sweep(s, POLICIES, scale=scale))
+    if args.backend == "array":
+        race = batched_tpch_race(scale=scale)
+        print(f"  tpch batched race speedup: {race['speedup']}x", flush=True)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=2)

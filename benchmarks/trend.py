@@ -20,7 +20,11 @@ import sys
 from typing import Dict, List, Tuple
 
 #: result files carrying sweep rows (policy/sweep/point/avg_stream_time_s/io_gb)
-SWEEP_FILES = ("micro.json", "micro_array.json", "tpch.json")
+SWEEP_FILES = ("micro.json", "micro_array.json", "tpch.json",
+               "tpch_array.json")
+
+#: batched-race summary files (one dict each, see _race_section)
+RACE_FILES = ("batched_race.json", "tpch_race.json")
 
 
 def _load_rows(path: str) -> List[dict]:
@@ -51,10 +55,11 @@ def _fmt_delta(new: float, old: float) -> str:
     return f"{d*100:+.1f}%"
 
 
-def _race_section(prev_dir: str, cur_dir: str) -> List[str]:
-    """Render the batched-race summary (speedup of the vmapped array sweep
-    vs sequential event runs) — the substrate's headline wall-clock trend."""
-    # batched_race.json holds a single summary dict, not a row list
+def _race_section(prev_dir: str, cur_dir: str, fname: str) -> List[str]:
+    """Render a batched-race summary (speedup of the vmapped array sweep
+    vs sequential event runs) — the substrate's headline wall-clock trend.
+    ``fname`` holds a single summary dict, not a row list (micro and TPC-H
+    each write their own)."""
     def _load_dict(path):
         try:
             with open(path) as f:
@@ -63,11 +68,11 @@ def _race_section(prev_dir: str, cur_dir: str) -> List[str]:
         except (OSError, ValueError):
             return None
 
-    cur = _load_dict(os.path.join(cur_dir, "batched_race.json"))
-    prev = _load_dict(os.path.join(prev_dir, "batched_race.json"))
+    cur = _load_dict(os.path.join(cur_dir, fname))
+    prev = _load_dict(os.path.join(prev_dir, fname))
     if cur is None:
         return []
-    lines = ["### batched_race.json", "",
+    lines = [f"### {fname}", "",
              "| metric | current | previous | Δ |", "|---|---|---|---|"]
     pv = prev or {}
     for key in ("speedup", "array_vmapped_wall_s", "event_sequential_wall_s"):
@@ -116,10 +121,11 @@ def report(prev_dir: str, cur_dir: str) -> str:
                 f"{io_new} | {_fmt_delta(io_new, p.get('io_gb'))} |"
             )
         lines.append("")
-    race = _race_section(prev_dir, cur_dir)
-    if race:
-        any_table = True
-        lines.extend(race)
+    for fname in RACE_FILES:
+        race = _race_section(prev_dir, cur_dir, fname)
+        if race:
+            any_table = True
+            lines.extend(race)
     if not any_table and len(lines) <= 2:
         lines.append("_no comparable sweep results found_")
     return "\n".join(lines)

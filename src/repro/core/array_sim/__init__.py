@@ -11,11 +11,17 @@ triggers), so the full paper envelope runs batched — buffer pools from
 10% of the accessed working set upward, cross-validated against the
 event engine per ``validate.ERROR_BARS``.
 
+``compiler.compile_workload`` lowers ANY multi-table workload (the §4.2
+TPC-H throughput run included) into the same fixed-shape arrays via
+global page indexing with per-table/per-column offsets; ``build_spec``
+is the single-table legacy entry point over the same lowering.
+
 Kept separate from ``repro.core.__init__`` so the dict-based engine stays
 importable without pulling in JAX.
 """
 
 from .spec import SimSpec, build_spec
+from .compiler import compile_workload, referenced_tables
 from .sim import (
     POLICY_IDS,
     ArrayResult,
@@ -30,7 +36,12 @@ from .sim import (
     stack_configs,
 )
 from .policies import next_consumption, target_buckets, time_to_bucket
-from .validate import cross_validate, cross_validate_sweep
+from .validate import (
+    cross_validate,
+    cross_validate_sweep,
+    cross_validate_tpch,
+    cross_validate_tpch_sweep,
+)
 
 __all__ = [
     "ArrayResult",
@@ -39,8 +50,12 @@ __all__ = [
     "SimSpec",
     "SimState",
     "build_spec",
+    "compile_workload",
     "cross_validate",
     "cross_validate_sweep",
+    "cross_validate_tpch",
+    "cross_validate_tpch_sweep",
+    "referenced_tables",
     "init_state",
     "make_config",
     "make_runner",

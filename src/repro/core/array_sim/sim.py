@@ -27,7 +27,14 @@ as a **pure, fixed-shape array program**:
   the timeline — ``RefreshRequestedBuckets`` as one vector op;
 * everything is ``jax.jit``- and ``jax.vmap``-compatible, so an entire
   sweep axis (buffer sizes x bandwidths x policies) runs as ONE batched
-  computation instead of N serial Python event loops.
+  computation instead of N serial Python event loops;
+* workloads may span SEVERAL tables (``compiler.compile_workload``):
+  pages live in one global id space with per-column offsets, each query
+  row carries its own table's tuple coordinates, and the global column
+  mask restricts every per-column computation (frontier cursors, advance
+  limits, consumption estimates) to the query's table — the step itself
+  never branches on a table id, which is what keeps the TPC-H throughput
+  run (Figs 14-16) on the same jit/vmap path as the microbenchmark.
 
 The PBM hot path — timeline shift + spill + batched Belady-rule eviction
 — is dispatched through ``repro.kernels.ops.pbm_timeline_step``: a Pallas
@@ -44,7 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .policies import BIG_CUT, next_consumption, target_buckets
-from .spec import SimSpec, build_spec
+from .spec import SimSpec
 
 _REQ_NONE = 1 << 24   # FIFO stamp sentinel: page not currently requested
 _JIT_STEPS = 6        # LRU-clock jitter amplitude in step-lengths
@@ -213,9 +220,27 @@ def init_state(spec: SimSpec) -> SimState:
     )
 
 
+def _evict_candidates(spec: SimSpec) -> int:
+    """Eviction-candidate window (``vmax``) for the timeline kernel: the
+    top-k priority pages considered per eviction call must cover a whole
+    amortised batch (16 pages) of *maximum-size* pages even when the
+    priority order is led by small column-tail / dimension-table pages —
+    a multi-table pool mixes page sizes, the micro pool does not.  64 is
+    the validated single-table floor; the median valid page size bounds
+    how many candidates one batch can need, capped at 256 to keep the
+    kernel's O(P * vmax)-ish work flat."""
+    sizes = spec.page_size[spec.page_valid]
+    if sizes.size == 0:
+        return 64
+    med = float(np.median(sizes))
+    need = int(np.ceil(16 * float(np.max(sizes)) / max(med, 1.0))) + 16
+    return int(min(256, max(64, need)))
+
+
 def make_step(spec: SimSpec, dt: float, time_slice: float,
               prefetch_pages: int = 8, refresh: bool = False,
-              static_policy: Optional[str] = None):
+              static_policy: Optional[str] = None,
+              vmax: Optional[int] = None):
     """Build the pure ``step(state, cfg) -> state``.
 
     ``refresh=False`` is the cheap within-slice step: the PBM timeline is
@@ -231,6 +256,7 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
     P, S, Q, C = spec.n_pages, spec.n_streams, spec.n_queries, spec.n_cols
     NR = spec.not_requested
     nb, m = spec.nb, spec.buckets_per_group
+    vmax = _evict_candidates(spec) if vmax is None else int(vmax)
     K = int(prefetch_pages)
     # deepest per-column readahead actually reachable: the plan-entry-count
     # window spreads ~K entries over the scanned columns, so the scatter
@@ -481,13 +507,19 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         )
         # calibrated per policy: the engine's 8-entry window underfeeds the
         # array LRU at deep thrash (its requests are colder); a slightly
-        # wider LRU window restores the engine's churn level
+        # wider LRU window restores the engine's churn level.  The widening
+        # is a SINGLE-TABLE deep-thrash calibration (micro 0.1-0.2 buffer):
+        # on multi-table workloads the same +2 overfeeds churn at the
+        # paper's TPC-H operating points (30-50% buffer, mild pressure,
+        # +16% I/O at 0.5 buffer), where the engine's own window width
+        # tracks it within the validation bars — so it is keyed off there.
+        lru_w = K + 2 if spec.n_tables == 1 else K
         if static_policy is None:
-            k_win = jnp.where(cfg.policy == 1, K, K + 2)
+            k_win = jnp.where(cfg.policy == 1, K, lru_w)
         elif static_policy == "pbm":
             k_win = K
         else:
-            k_win = K + 2
+            k_win = lru_w
         # the blocking demand is exempt from the gate: the engine requests
         # the page it blocks on unconditionally, and a frontier page that
         # was resident at the block transition but evicted during the wait
@@ -698,7 +730,8 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         )
         bucket_out, evict = kops.pbm_timeline_step(
             bucket_pre, b_target, last_used2, page_size, evictable,
-            state.time_passed, k_shift, need_free, cfg.policy, t2, nb=nb, m=m,
+            state.time_passed, k_shift, need_free, cfg.policy, t2,
+            nb=nb, m=m, vmax=vmax,
         )
 
         resident2 = (state.resident & ~evict) | load_mask
@@ -749,6 +782,7 @@ def make_runner(
     max_slices: int = 80_000,
     static_policy: Optional[str] = None,
     step_pages: float = 1.0,
+    vmax: Optional[int] = None,
 ):
     """Jitted ``run(cfg) -> SimState``: steps until every stream finishes.
 
@@ -768,9 +802,9 @@ def make_runner(
     dt = float(step_pages) * float(np.max(spec.page_size)) / float(bandwidth_ref)
     n_inner = max(1, int(round(time_slice / dt)))
     cheap = make_step(spec, dt, time_slice, prefetch_pages, refresh=False,
-                      static_policy=static_policy)
+                      static_policy=static_policy, vmax=vmax)
     full = make_step(spec, dt, time_slice, prefetch_pages, refresh=True,
-                     static_policy=static_policy)
+                     static_policy=static_policy, vmax=vmax)
 
     def run(cfg: ArraySimConfig) -> SimState:
         state = init_state(spec)
@@ -842,13 +876,16 @@ def run_workload_array(
     runner=None,
 ) -> ArrayResult:
     """Array-backend counterpart of ``repro.core.run_workload`` for the
-    LRU / PBM policies (CScan and OPT stay on the event engine).  Check
-    ``result.extras["truncated"]`` when lowering ``max_time``: a run cut
-    short by the livelock guard reports lower bounds, not results."""
+    LRU / PBM policies (CScan and OPT stay on the event engine).  Accepts
+    any workload the compiler can lower — multi-table streams included.
+    Check ``result.extras["truncated"]`` when lowering ``max_time``: a run
+    cut short by the livelock guard reports lower bounds, not results."""
     import time
 
+    from .compiler import compile_workload
+
     if spec is None:
-        spec = build_spec(db, streams)
+        spec = compile_workload(db, streams)
     if runner is None:
         runner = make_runner(spec, bandwidth_ref=bandwidth,
                              time_slice=time_slice,

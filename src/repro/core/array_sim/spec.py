@@ -10,17 +10,24 @@ arrays once, up front, so the simulation step is pure array math:
 * **columns** — tuples-per-page and the page-id offset of each column,
   which turn a cursor position into a page index with one divide
   (the array analogue of :meth:`Column.pages_for_range`).
-* **streams** — each stream's queries as ``(start, length, rate, column
-  mask)`` rows, padded to the longest stream.
+* **streams** — each stream's queries as ``(table, start, length, rate,
+  column mask)`` rows, padded to the longest stream.
 
-Only single-table, single-range scans are supported — exactly the shape of
-the paper's microbenchmark (Figs 11-13).  TPC-H multi-scan queries stay on
-the event engine.
+Workloads over several tables (the paper's §4.2 TPC-H throughput run:
+8 tables / 61 columns, 22 rotated query templates per stream) lower
+through :mod:`repro.core.array_sim.compiler`, which lays the pages of
+every referenced (table, column) pair out in one global id space; the
+``multitable`` extension fields below record the table geometry.  Tuple
+coordinates stay per table — each query's cursor lives in its own
+table's coordinate system, and the global column mask restricts every
+per-column computation to that table.  ``build_spec`` remains the
+single-table entry point (the microbenchmark shape of Figs 11-13) and
+delegates to the same compiler, so there is exactly one lowering.
 """
 
 from __future__ import annotations
 
-from typing import List, NamedTuple, Sequence
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -57,11 +64,19 @@ class SimSpec(NamedTuple):
     col_tpp: np.ndarray       # f32 tuples per page
     col_ntuples: np.ndarray   # f32
     # ---- per-stream queries (S, Q) ---------------------------------------
-    q_start: np.ndarray       # f32 absolute first tuple
+    q_start: np.ndarray       # f32 first tuple (in the query table's coords)
     q_len: np.ndarray         # f32 tuples scanned
     q_rate: np.ndarray        # f32 tuples/sec CPU rate
     q_cols: np.ndarray        # bool (S, Q, C) column mask
     n_q: np.ndarray           # i32 (S,) valid queries per stream
+    # ---- multitable extension (compiler.py) ------------------------------
+    # The step itself resolves everything through the per-column offset
+    # tables above; these record the table geometry for introspection,
+    # validation, and result attribution.
+    n_tables: int = 1
+    table_names: Tuple[str, ...] = ()
+    col_table: Optional[np.ndarray] = None   # i32 (C,) owning table
+    q_table: Optional[np.ndarray] = None     # i32 (S, Q) table of each query
 
     @property
     def nb(self) -> int:
@@ -87,8 +102,19 @@ class SimSpec(NamedTuple):
         """Static per-column page-trigger lookahead for one step of length
         ``dt``: the most page boundaries the fastest scan can cross in the
         densest column, plus one so the conservative advance cap
-        (``W``-th trigger) never throttles an unblocked scan."""
-        return int(np.ceil(1.1 * self.max_rate * float(dt) / self.min_tpp)) + 1
+        (``W``-th trigger) never throttles an unblocked scan.
+
+        Computed per column and capped at the column's page count: a tiny
+        dimension table (a handful of tuples per page, one page per
+        column) has a dense tuple grid but nothing beyond its last page,
+        so it must not inflate the global window the way a naive
+        ``max_rate / min_tpp`` bound would in a multi-table spec.
+        """
+        need = np.ceil(
+            1.1 * self.max_rate * float(dt) / self.col_tpp
+        ).astype(np.int64) + 1
+        need = np.minimum(need, self.col_npages.astype(np.int64) + 1)
+        return max(1, int(np.max(need)))
 
 
 def build_spec(
@@ -97,84 +123,21 @@ def build_spec(
     n_groups: int = 10,
     buckets_per_group: int = 4,
 ) -> SimSpec:
-    """Flatten a single-table workload into a :class:`SimSpec`."""
+    """Flatten a single-table workload into a :class:`SimSpec`.
+
+    Legacy entry point of the microbenchmark shape; the lowering itself
+    lives in :func:`repro.core.array_sim.compiler.compile_workload` (this
+    wrapper only keeps the historical one-table contract, which callers
+    like the parity property tests rely on for early shape errors).
+    """
+    from .compiler import compile_workload
+
     tables = {s.table for stream in streams for s in stream}
     if len(tables) != 1:
-        raise ValueError(f"array backend needs a single table, got {tables}")
-    table = db.tables[next(iter(tables))]
-    col_names: List[str] = list(table.columns)
-    cindex = {c: i for i, c in enumerate(col_names)}
-    C = len(col_names)
-
-    sizes, firsts, lasts, pcols = [], [], [], []
-    col_start = np.zeros(C, np.int32)
-    col_npages = np.zeros(C, np.int32)
-    col_tpp = np.zeros(C, np.float32)
-    off = 0
-    for ci, cname in enumerate(col_names):
-        col = table.columns[cname]
-        if not col.pages:
-            raise ValueError(
-                f"column {table.name}.{cname} has zero pages; every column "
-                "needs at least one page to define its tuples-per-page grid "
-                "(re-run Column.build_pages or drop the column)"
-            )
-        col_start[ci] = off
-        col_npages[ci] = len(col.pages)
-        col_tpp[ci] = col.n_tuples / len(col.pages)
-        for p in col.pages:
-            sizes.append(p.size_bytes)
-            firsts.append(p.first_tuple)
-            lasts.append(p.last_tuple)
-            pcols.append(ci)
-        off += len(col.pages)
-
-    P = ((off + PAGE_PAD - 1) // PAGE_PAD) * PAGE_PAD
-    pad = P - off
-    page_size = np.asarray(sizes + [0] * pad, np.float32)
-    page_first = np.asarray(firsts + [0] * pad, np.float32)
-    page_last = np.asarray(lasts + [0] * pad, np.float32)
-    page_col = np.asarray(pcols + [0] * pad, np.int32)
-    page_valid = np.asarray([True] * off + [False] * pad, bool)
-
-    S = len(streams)
-    Q = max(len(s) for s in streams)
-    q_start = np.zeros((S, Q), np.float32)
-    q_len = np.ones((S, Q), np.float32)
-    q_rate = np.full((S, Q), 1.0, np.float32)
-    q_cols = np.zeros((S, Q, C), bool)
-    n_q = np.zeros(S, np.int32)
-    for si, stream in enumerate(streams):
-        n_q[si] = len(stream)
-        for qi, spec in enumerate(stream):
-            if len(spec.ranges) != 1:
-                raise ValueError("array backend supports single-range scans")
-            a, b = spec.ranges[0]
-            q_start[si, qi] = a
-            q_len[si, qi] = b - a
-            q_rate[si, qi] = spec.tuple_rate
-            for c in spec.columns:
-                q_cols[si, qi, cindex[c]] = True
-
-    return SimSpec(
-        n_pages=P,
-        n_streams=S,
-        n_queries=Q,
-        n_cols=C,
-        n_groups=n_groups,
-        buckets_per_group=buckets_per_group,
-        page_size=page_size,
-        page_first=page_first,
-        page_last=page_last,
-        page_col=page_col,
-        page_valid=page_valid,
-        col_start=col_start,
-        col_npages=col_npages,
-        col_tpp=col_tpp,
-        col_ntuples=np.full(C, float(table.n_tuples), np.float32),
-        q_start=q_start,
-        q_len=q_len,
-        q_rate=q_rate,
-        q_cols=q_cols,
-        n_q=n_q,
+        raise ValueError(
+            f"array backend needs a single table, got {tables} — lower "
+            "multi-table workloads with array_sim.compiler.compile_workload"
+        )
+    return compile_workload(
+        db, streams, n_groups=n_groups, buckets_per_group=buckets_per_group
     )

@@ -1,11 +1,20 @@
 """Cross-validation harness: array backend vs the discrete-event engine.
 
-Runs the same scaled microbenchmark workload through both simulators and
-reports, per (buffer point, policy), the relative error of the two paper
-metrics (average stream time and total I/O volume).  The array backend is
-a discretised fluid approximation of the event engine, so small deviations
-are expected; the acceptance envelope of this repo is the paper's small-
-buffer operating range:
+Runs the same workloads through both simulators and reports, per
+(workload, buffer point, policy), the relative error of the two paper
+metrics (average stream time and total I/O volume).  Two suites:
+
+* **micro** — the scaled §4.1 microbenchmark (single table, the
+  original envelope of PR 1/2);
+* **tpch** — the §4.2 multi-table throughput workload lowered through
+  ``compiler.compile_workload`` (8 tables, rotated 22-template streams),
+  validated at the paper's default operating shape (buffer fracs
+  0.15/0.3/0.5 of the accessed volume, 600 MB/s; bars in
+  ``TPCH_ERROR_BARS``).
+
+The array backend is a discretised fluid approximation of the event
+engine, so small deviations are expected; the acceptance envelope of the
+micro suite is the paper's small-buffer operating range:
 
 * ``buffer_frac`` 0.1, 0.2 and 0.4 of the accessed working set (700 MB/s,
   8 streams, quick-pass scale — the configuration of
@@ -35,12 +44,21 @@ Exits non-zero when a point misses its error bar.  Also consumed by
 from __future__ import annotations
 
 import argparse
+import math
 import sys
 import time
 from typing import Dict, List, Optional, Sequence
 
 from ..engine import EngineConfig, run_workload
-from ..workload import make_lineitem_db, micro_accessed_bytes, micro_streams
+from ..workload import (
+    make_lineitem_db,
+    make_tpch_db,
+    micro_accessed_bytes,
+    micro_streams,
+    tpch_accessed_bytes,
+    tpch_streams,
+)
+from .compiler import compile_workload
 from .sim import make_runner, run_workload_array
 from .spec import build_spec
 
@@ -55,42 +73,47 @@ ERROR_BARS = {
 }
 DEFAULT_FRACS = (0.1, 0.2, 0.4)
 
+#: TPC-H multi-table envelope (buffer_frac, policy) -> max |rel err|,
+#: fit at the quick-pass TPC-H point (scale 0.05, 4 streams, 600 MB/s,
+#: seed 7 — the paper's §4.2 operating shape scaled down like the micro
+#: bars were; re-fit at full scale via the CI ``refit-error-bars`` job).
+#: Measured at fit time: <= 5% everywhere except the 0.5-buffer points
+#: (LRU +9.9% / PBM +7.6% I/O — mild-pressure churn slightly over-
+#: reproduced), hence the one widened bar.
+TPCH_ERROR_BARS = {
+    (0.15, "lru"): 0.10,
+    (0.15, "pbm"): 0.10,
+    (0.3, "lru"): 0.10,
+    (0.3, "pbm"): 0.10,
+    (0.5, "lru"): 0.12,
+    (0.5, "pbm"): 0.10,
+}
+TPCH_DEFAULTS = dict(scale=0.05, n_streams=4, buffer_frac=0.3,
+                     bandwidth=600e6, seed=7)
 
-def cross_validate(
-    scale: float = 0.25,
-    n_streams: int = 8,
-    queries_per_stream: int = 16,
-    seed: int = 3,
-    buffer_frac: float = 0.4,
-    bandwidth: float = 700e6,
-    policies: Sequence[str] = ("lru", "pbm"),
-    time_slice: Optional[float] = None,
-    _shared=None,
+
+def _compare_point(
+    shared,
+    policies: Sequence[str],
+    buffer_frac: float,
+    bandwidth: float,
+    time_slice: float,
+    sample_interval: float,
+    workload: str,
 ) -> List[Dict]:
-    """Run event + array backends on one microbenchmark point; return one
-    row per policy with both results and their relative differences.
+    """One (buffer point) comparison, both backends, one row per policy —
+    the single harness behind the micro AND TPC-H suites.
 
     Raises ``RuntimeError`` if the array run was truncated by the livelock
     guard — a truncated run reports lower bounds, not results.
     """
-    if time_slice is None:
-        time_slice = 0.1 * scale  # microbench convention
-    if _shared is None:
-        db = make_lineitem_db(scale_tuples=int(180_000_000 * scale))
-        ws = micro_accessed_bytes(db)
-        streams = micro_streams(db, n_streams=n_streams,
-                                queries_per_stream=queries_per_stream,
-                                seed=seed)
-        spec = build_spec(db, streams)
-        runners = {}
-    else:
-        db, ws, streams, spec, runners = _shared
+    db, ws, streams, spec, runners = shared
     cap = max(1 << 22, int(buffer_frac * ws))
-
     rows: List[Dict] = []
     for pol in policies:
         cfg = EngineConfig(bandwidth=bandwidth, buffer_bytes=cap,
-                           sample_interval=2.0, pbm_time_slice=time_slice)
+                           sample_interval=sample_interval,
+                           pbm_time_slice=time_slice)
         t0 = time.time()
         ev = run_workload(db, streams, pol, cfg)
         ev_wall = time.time() - t0
@@ -104,13 +127,14 @@ def cross_validate(
         )
         if ar.extras.get("truncated"):
             raise RuntimeError(
-                f"array run truncated by the livelock guard at "
+                f"array run truncated by the livelock guard at {workload} "
                 f"buffer_frac={buffer_frac} policy={pol} "
                 f"({ar.extras['unfinished_streams']} unfinished streams "
                 f"after {ar.sim_time:.1f}s sim time) — refusing to compare "
                 "a lower bound against a finished event run"
             )
         rows.append({
+            "workload": workload,
             "policy": pol,
             "buffer_frac": buffer_frac,
             "event_stream_time_s": round(ev.avg_stream_time, 4),
@@ -127,6 +151,32 @@ def cross_validate(
             "array_churn_loads": ar.extras.get("churn_loads", 0),
         })
     return rows
+
+
+def cross_validate(
+    scale: float = 0.25,
+    n_streams: int = 8,
+    queries_per_stream: int = 16,
+    seed: int = 3,
+    buffer_frac: float = 0.4,
+    bandwidth: float = 700e6,
+    policies: Sequence[str] = ("lru", "pbm"),
+    time_slice: Optional[float] = None,
+    _shared=None,
+) -> List[Dict]:
+    """Run event + array backends on one microbenchmark point; return one
+    row per policy with both results and their relative differences."""
+    if time_slice is None:
+        time_slice = 0.1 * scale  # microbench convention
+    if _shared is None:
+        db = make_lineitem_db(scale_tuples=int(180_000_000 * scale))
+        ws = micro_accessed_bytes(db)
+        streams = micro_streams(db, n_streams=n_streams,
+                                queries_per_stream=queries_per_stream,
+                                seed=seed)
+        _shared = (db, ws, streams, build_spec(db, streams), {})
+    return _compare_point(_shared, policies, buffer_frac, bandwidth,
+                          time_slice, sample_interval=2.0, workload="micro")
 
 
 def cross_validate_sweep(
@@ -151,37 +201,137 @@ def cross_validate_sweep(
     return rows
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", type=float, default=0.25)
-    ap.add_argument("--buffer-frac", type=float, default=None,
-                    help="single point; default sweeps 0.1, 0.2, 0.4")
-    ap.add_argument("--streams", type=int, default=8)
-    ap.add_argument("--queries", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=3)
-    args = ap.parse_args()
-    fracs = [args.buffer_frac] if args.buffer_frac is not None else \
-        list(DEFAULT_FRACS)
-    rows = cross_validate_sweep(
-        fracs=fracs, scale=args.scale, n_streams=args.streams,
-        queries_per_stream=args.queries, seed=args.seed,
-    )
+def cross_validate_tpch(
+    scale: float = 0.05,
+    n_streams: int = 4,
+    seed: int = 7,
+    buffer_frac: float = 0.3,
+    bandwidth: float = 600e6,
+    policies: Sequence[str] = ("lru", "pbm"),
+    time_slice: Optional[float] = None,
+    _shared=None,
+) -> List[Dict]:
+    """TPC-H cross-validation point: the §4.2 multi-table workload (8
+    tables, 22 rotated query templates per stream, compiled through
+    ``compiler.compile_workload``) run on both the event engine and the
+    array backend via the same :func:`_compare_point` harness as the
+    micro suite; CScan/OPT stay event-engine-only."""
+    if time_slice is None:
+        time_slice = 0.1 * scale  # same scaling convention as the micro path
+    if _shared is None:
+        db = make_tpch_db(scale=scale)
+        streams = tpch_streams(db, n_streams=n_streams, seed=seed)
+        ws = tpch_accessed_bytes(db, streams)
+        _shared = (db, ws, streams, compile_workload(db, streams), {})
+    return _compare_point(_shared, policies, buffer_frac, bandwidth,
+                          time_slice, sample_interval=5.0, workload="tpch")
+
+
+def cross_validate_tpch_sweep(
+    fracs: Optional[Sequence[float]] = None,
+    scale: float = 0.05,
+    **kw,
+) -> List[Dict]:
+    """:func:`cross_validate_tpch` over the enforced TPC-H buffer points
+    (default: every frac in ``TPCH_ERROR_BARS``), reusing the workload,
+    compiled spec, and runners across points — so the CLI and the
+    ``refit-error-bars`` job measure the whole envelope, including the
+    widened 0.5 LRU bar, not just the default operating point."""
+    if fracs is None:
+        fracs = sorted({f for (f, _pol) in TPCH_ERROR_BARS})
+    db = make_tpch_db(scale=scale)
+    streams = tpch_streams(db, n_streams=kw.get("n_streams", 4),
+                           seed=kw.get("seed", 7))
+    ws = tpch_accessed_bytes(db, streams)
+    spec = compile_workload(db, streams)
+    shared = (db, ws, streams, spec, {})
+    rows: List[Dict] = []
+    for f in fracs:
+        rows.extend(cross_validate_tpch(scale=scale, buffer_frac=f,
+                                        _shared=shared, **kw))
+    return rows
+
+
+def _print_rows(rows: List[Dict], enforce: bool = True) -> int:
+    """Render rows; return the count outside the envelope (0 when
+    ``enforce`` is off — the ``--fit-bars`` reporting mode)."""
     failed = 0
     for r in rows:
-        bar = ERROR_BARS.get((r["buffer_frac"], r["policy"]), 0.10)
+        wl = r.get("workload", "micro")
+        bars = TPCH_ERROR_BARS if wl == "tpch" else ERROR_BARS
+        bar = bars.get((r["buffer_frac"], r["policy"]), 0.10)
         worst = max(abs(r["stream_time_rel_err"]), abs(r["io_rel_err"]))
         ok = worst <= bar
-        failed += 0 if ok else 1
+        if enforce:
+            failed += 0 if ok else 1
+            verdict = "OK" if ok else f"FAIL (bar {bar:.0%})"
+        else:
+            verdict = f"measured {worst:.1%} (current bar {bar:.0%})"
         print(
-            f"buf={r['buffer_frac']:<4} {r['policy']:4s} "
+            f"{wl:5s} buf={r['buffer_frac']:<4} {r['policy']:4s} "
             f"stream_time: event={r['event_stream_time_s']:.2f}s "
             f"array={r['array_stream_time_s']:.2f}s "
             f"({r['stream_time_rel_err']*100:+.1f}%) | io: "
             f"event={r['event_io_gb']:.3f}GB array={r['array_io_gb']:.3f}GB "
             f"({r['io_rel_err']*100:+.1f}%) | wall event={r['event_wall_s']:.2f}s "
-            f"array={r['array_wall_s']:.2f}s | "
-            f"{'OK' if ok else f'FAIL (bar {bar:.0%})'}"
+            f"array={r['array_wall_s']:.2f}s | {verdict}"
         )
+    return failed
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.25,
+                    help="microbenchmark workload scale")
+    ap.add_argument("--buffer-frac", type=float, default=None,
+                    help="single micro point; default sweeps 0.1, 0.2, 0.4")
+    ap.add_argument("--streams", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--workload", choices=["micro", "tpch", "all"],
+                    default="all",
+                    help="which cross-validation suite(s) to run")
+    ap.add_argument("--tpch-scale", type=float,
+                    default=TPCH_DEFAULTS["scale"])
+    ap.add_argument("--tpch-streams", type=int,
+                    default=TPCH_DEFAULTS["n_streams"])
+    ap.add_argument("--tpch-buffer-frac", type=float, default=None,
+                    help="single TPC-H point; default sweeps every frac "
+                         "in TPCH_ERROR_BARS")
+    ap.add_argument("--fit-bars", action="store_true",
+                    help="report measured errors without enforcing the "
+                         "bars — the CI refit job runs this at full scale "
+                         "to recalibrate ERROR_BARS / TPCH_ERROR_BARS")
+    args = ap.parse_args()
+    rows: List[Dict] = []
+    if args.workload in ("micro", "all"):
+        fracs = [args.buffer_frac] if args.buffer_frac is not None else \
+            list(DEFAULT_FRACS)
+        rows.extend(cross_validate_sweep(
+            fracs=fracs, scale=args.scale, n_streams=args.streams,
+            queries_per_stream=args.queries, seed=args.seed,
+        ))
+    if args.workload in ("tpch", "all"):
+        tpch_fracs = [args.tpch_buffer_frac] \
+            if args.tpch_buffer_frac is not None else None
+        rows.extend(cross_validate_tpch_sweep(
+            fracs=tpch_fracs, scale=args.tpch_scale,
+            n_streams=args.tpch_streams,
+            bandwidth=TPCH_DEFAULTS["bandwidth"],
+            seed=TPCH_DEFAULTS["seed"],
+        ))
+    failed = _print_rows(rows, enforce=not args.fit_bars)
+    if args.fit_bars:
+        sug = {}
+        for r in rows:
+            key = (r.get("workload", "micro"), r["buffer_frac"], r["policy"])
+            worst = max(abs(r["stream_time_rel_err"]), abs(r["io_rel_err"]))
+            # suggested bar: measured worst error + 25% headroom, floored
+            # at the 10% default, rounded up to the percent
+            sug[key] = max(0.10, math.ceil(worst * 1.25 * 100) / 100)
+        print("suggested bars (measured worst error x1.25, >= 10%):")
+        for key, bar in sorted(sug.items(), key=str):
+            print(f"  {key}: {bar:.2f}")
     if failed:
         print(f"{failed} point(s) outside the validated envelope",
               file=sys.stderr)

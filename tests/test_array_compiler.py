@@ -1,0 +1,222 @@
+"""Workload-compiler regression tests.
+
+``repro.core.array_sim.compiler`` is now the single lowering from the
+event engine's object world into ``SimSpec`` arrays; ``build_spec`` is a
+thin single-table wrapper over it.  ``_legacy_build_spec`` below is a
+frozen copy of the seed's hand-rolled single-table lowering (PR 1/2) —
+the oracle that pins the compiler's output bit-for-bit on the
+microbenchmark shape, so re-routing the micro path through the compiler
+can never silently move the validated operating points.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.pages import Database
+from repro.core.scans import ScanSpec
+from repro.core.workload import make_lineitem_db, micro_streams
+from repro.core.array_sim import build_spec, compile_workload
+from repro.core.array_sim.compiler import referenced_tables
+from repro.core.array_sim.spec import PAGE_PAD, SimSpec
+
+
+def _legacy_build_spec(db, streams, n_groups=10, buckets_per_group=4):
+    """Frozen seed lowering (single table) — do not modernise: this is the
+    bit-for-bit reference the compiler must reproduce."""
+    tables = {s.table for stream in streams for s in stream}
+    assert len(tables) == 1
+    table = db.tables[next(iter(tables))]
+    col_names = list(table.columns)
+    cindex = {c: i for i, c in enumerate(col_names)}
+    C = len(col_names)
+
+    sizes, firsts, lasts, pcols = [], [], [], []
+    col_start = np.zeros(C, np.int32)
+    col_npages = np.zeros(C, np.int32)
+    col_tpp = np.zeros(C, np.float32)
+    off = 0
+    for ci, cname in enumerate(col_names):
+        col = table.columns[cname]
+        col_start[ci] = off
+        col_npages[ci] = len(col.pages)
+        col_tpp[ci] = col.n_tuples / len(col.pages)
+        for p in col.pages:
+            sizes.append(p.size_bytes)
+            firsts.append(p.first_tuple)
+            lasts.append(p.last_tuple)
+            pcols.append(ci)
+        off += len(col.pages)
+
+    P = ((off + PAGE_PAD - 1) // PAGE_PAD) * PAGE_PAD
+    pad = P - off
+    S = len(streams)
+    Q = max(len(s) for s in streams)
+    q_start = np.zeros((S, Q), np.float32)
+    q_len = np.ones((S, Q), np.float32)
+    q_rate = np.full((S, Q), 1.0, np.float32)
+    q_cols = np.zeros((S, Q, C), bool)
+    n_q = np.zeros(S, np.int32)
+    for si, stream in enumerate(streams):
+        n_q[si] = len(stream)
+        for qi, spec in enumerate(stream):
+            a, b = spec.ranges[0]
+            q_start[si, qi] = a
+            q_len[si, qi] = b - a
+            q_rate[si, qi] = spec.tuple_rate
+            for c in spec.columns:
+                q_cols[si, qi, cindex[c]] = True
+
+    return SimSpec(
+        n_pages=P,
+        n_streams=S,
+        n_queries=Q,
+        n_cols=C,
+        n_groups=n_groups,
+        buckets_per_group=buckets_per_group,
+        page_size=np.asarray(sizes + [0] * pad, np.float32),
+        page_first=np.asarray(firsts + [0] * pad, np.float32),
+        page_last=np.asarray(lasts + [0] * pad, np.float32),
+        page_col=np.asarray(pcols + [0] * pad, np.int32),
+        page_valid=np.asarray([True] * off + [False] * pad, bool),
+        col_start=col_start,
+        col_npages=col_npages,
+        col_tpp=col_tpp,
+        col_ntuples=np.full(C, float(table.n_tuples), np.float32),
+        q_start=q_start,
+        q_len=q_len,
+        q_rate=q_rate,
+        q_cols=q_cols,
+        n_q=n_q,
+    )
+
+
+#: the array fields of the seed SimSpec — the bit-for-bit contract
+_SEED_ARRAY_FIELDS = (
+    "page_size", "page_first", "page_last", "page_col", "page_valid",
+    "col_start", "col_npages", "col_tpp", "col_ntuples",
+    "q_start", "q_len", "q_rate", "q_cols", "n_q",
+)
+_SEED_SCALAR_FIELDS = (
+    "n_pages", "n_streams", "n_queries", "n_cols", "n_groups",
+    "buckets_per_group",
+)
+
+
+# ------------------------------------------------- round-trip pin ---------
+
+def test_compiler_reproduces_seed_build_spec_bit_for_bit():
+    """Compiling the single-table microbenchmark through the workload
+    compiler must reproduce the seed ``build_spec`` arrays exactly —
+    same dtypes, same bytes."""
+    db = make_lineitem_db(scale_tuples=4_000_000)
+    streams = micro_streams(db, n_streams=4, queries_per_stream=6, seed=3)
+    legacy = _legacy_build_spec(db, streams)
+    for spec in (compile_workload(db, streams), build_spec(db, streams)):
+        for f in _SEED_SCALAR_FIELDS:
+            assert getattr(spec, f) == getattr(legacy, f), f
+        for f in _SEED_ARRAY_FIELDS:
+            a, b = getattr(spec, f), getattr(legacy, f)
+            assert a.dtype == b.dtype, f
+            np.testing.assert_array_equal(a, b, err_msg=f)
+
+
+def test_compiler_multitable_fields_on_single_table():
+    db = make_lineitem_db(scale_tuples=2_000_000)
+    streams = micro_streams(db, n_streams=2, queries_per_stream=2, seed=3)
+    spec = compile_workload(db, streams)
+    assert spec.n_tables == 1
+    assert spec.table_names == ("lineitem",)
+    assert np.all(spec.col_table == 0)
+    assert np.all(spec.q_table == 0)
+
+
+# ------------------------------------------------- multi-table layout -----
+
+def _two_table_db():
+    db = Database()
+    db.add_table("a", 1_000_000, {"x": 2.0, "y": 0.5}, page_bytes=128 << 10)
+    db.add_table("b", 300_000, {"u": 4.0}, page_bytes=128 << 10)
+    return db
+
+
+def test_global_page_indexing_offsets_and_coords():
+    """Two tables with different pages-per-column: columns are laid out
+    contiguously in db order, offsets are cumulative, and page tuple
+    coordinates stay in each table's own coordinate system."""
+    db = _two_table_db()
+    st = [[ScanSpec("a", ("x", "y"), ((0, 1_000_000),)),
+           ScanSpec("b", ("u",), ((0, 300_000),))]]
+    spec = compile_workload(db, st)
+    assert spec.table_names == ("a", "b")
+    # a.x: 1M*2.0B / 128KB = 16 pages; a.y: 1M*0.5B -> 4; b.u: 300k*4B -> 10
+    np.testing.assert_array_equal(spec.col_npages, [16, 4, 10])
+    np.testing.assert_array_equal(
+        spec.col_start, np.cumsum([0, 16, 4])[:3])
+    np.testing.assert_array_equal(spec.col_table, [0, 0, 1])
+    # per-column tuple grids: a's columns span [0, 1M), b's span [0, 300k)
+    for ci, (lo, hi) in enumerate([(0, 1_000_000), (0, 1_000_000),
+                                   (0, 300_000)]):
+        s, n = int(spec.col_start[ci]), int(spec.col_npages[ci])
+        assert spec.page_first[s] == lo
+        assert spec.page_last[s + n - 1] == hi
+        assert np.all(np.diff(spec.page_first[s:s + n]) > 0)
+    # query rows: global column mask selects only the query's table
+    np.testing.assert_array_equal(spec.q_table[0], [0, 1])
+    np.testing.assert_array_equal(spec.q_cols[0, 0], [True, True, False])
+    np.testing.assert_array_equal(spec.q_cols[0, 1], [False, False, True])
+
+
+def test_compiler_drops_unreferenced_tables():
+    db = _two_table_db()
+    db.add_table("never_scanned", 500_000, {"z": 8.0}, page_bytes=128 << 10)
+    st = [[ScanSpec("a", ("x",), ((0, 1_000_000),))]]
+    spec = compile_workload(db, st)
+    assert spec.table_names == ("a",)
+    assert spec.n_cols == 2  # every column of a referenced table compiles
+    assert referenced_tables(db, st) == ["a"]
+    # ... unless the table set is pinned explicitly
+    spec_all = compile_workload(db, st, tables=["a", "b", "never_scanned"])
+    assert spec_all.n_tables == 3
+    assert spec_all.n_cols == 4
+
+
+# ------------------------------------------------- error contracts --------
+
+def test_build_spec_still_rejects_multi_table():
+    db = _two_table_db()
+    st = [[ScanSpec("a", ("x",), ((0, 10),)),
+           ScanSpec("b", ("u",), ((0, 10),))]]
+    with pytest.raises(ValueError, match="single table"):
+        build_spec(db, st)
+    compile_workload(db, st)  # the compiler lowers it fine
+
+
+def test_compiler_rejects_multi_range_and_unknown():
+    db = _two_table_db()
+    with pytest.raises(ValueError, match="single-range"):
+        compile_workload(db, [[ScanSpec("a", ("x",), ((0, 10), (20, 30)))]])
+    with pytest.raises(ValueError, match="unknown tables"):
+        compile_workload(db, [[ScanSpec("nope", ("x",), ((0, 10),))]])
+    # a too-narrow tables= override gets the friendly error, not a KeyError
+    with pytest.raises(ValueError, match="compiled table set"):
+        compile_workload(db, [[ScanSpec("b", ("u",), ((0, 10),))]],
+                         tables=["a"])
+    with pytest.raises(ValueError, match="zero pages"):
+        db.tables["a"].columns["y"].pages = []
+        compile_workload(db, [[ScanSpec("a", ("x",), ((0, 10),))]])
+
+
+def test_trigger_window_capped_by_tiny_tables():
+    """A one-page dimension table (dense tuples-per-page grid) must not
+    inflate the global trigger window: the per-column cap bounds it by
+    the column's page count."""
+    db = _two_table_db()
+    db.add_table("dim", 25, {"d": 4.0}, page_bytes=128 << 10)  # 1 tiny page
+    st = [[ScanSpec("a", ("x",), ((0, 1_000_000),), tuple_rate=240e6),
+           ScanSpec("dim", ("d",), ((0, 25),), tuple_rate=240e6)]]
+    spec = compile_workload(db, st)
+    dt = float(np.max(spec.page_size)) / 700e6
+    w = spec.trigger_window(dt)
+    naive = int(np.ceil(1.1 * spec.max_rate * dt / spec.min_tpp)) + 1
+    assert w <= 8          # stays a practical window size
+    assert naive > 1000    # the uncapped bound would explode
