@@ -13,18 +13,22 @@ from __future__ import annotations
 import argparse
 import json
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.core import EngineConfig, run_workload, simulate_belady
+from repro.core.policy_registry import names as policy_names
 from repro.core.workload import (
     make_lineitem_db,
     micro_accessed_bytes,
     micro_streams,
 )
 
-POLICIES = ["lru", "cscan", "pbm", "opt"]
-EXTENDED = ["mru", "pbm_lru", "attach"]
-ARRAY_POLICIES = ["lru", "pbm"]  # cscan/opt stay on the event engine
+# one source of truth for policy lists: the registry shared by both
+# backends (unknown names fail there with the known-name list)
+POLICIES = policy_names(backend="event", paper_only=True)
+EXTENDED = [n for n in policy_names(backend="event")
+            if n not in POLICIES]
+ARRAY_POLICIES = policy_names(backend="array")
 
 DEFAULTS = dict(n_streams=8, queries=16, bandwidth=700e6, buffer_frac=0.4, seed=3)
 
@@ -107,9 +111,10 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 3):
     """Array-backend (``repro.core.array_sim``) version of :func:`sweep`.
 
     Emits rows with the same schema (policy / avg_stream_time_s / io_gb /
-    wall_s / sweep / point) for the LRU + PBM array policies.  One jitted
-    runner per (streams-config, policy) is reused across sweep points: the
-    capacity and bandwidth of each point are traced config scalars.
+    wall_s / sweep / point) for every registered array policy — the
+    paper's full four-way comparison.  One jitted runner per
+    (streams-config, policy) is reused across sweep points: the capacity
+    and bandwidth of each point are traced config scalars.
     """
     from repro.core.array_sim import build_spec, make_runner, run_workload_array
 
@@ -146,7 +151,7 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 3):
             spec = build_spec(db, streams)
             runners = {
                 pol: make_runner(spec, bandwidth_ref=700e6,
-                                 time_slice=time_slice, static_policy=pol)
+                                 time_slice=time_slice, policies=(pol,))
                 for pol in policies
             }
             spec_cache[skey] = (streams, spec, runners)
@@ -217,7 +222,7 @@ def batched_buffer_race(scale: float = 1.0, seed: int = 3,
     event_wall = time.time() - t0
 
     runner = make_runner(spec, bandwidth_ref=700e6, time_slice=time_slice,
-                         static_policy=policy, step_pages=2.0)
+                         policies=(policy,), step_pages=2.0)
     vrun = jax.jit(jax.vmap(runner))
     cfgs = stack_configs([make_config(spec, cap, 700e6, policy) for cap in caps])
     t0 = time.time()

@@ -12,10 +12,11 @@ roofline term per step and derived the roofline fraction.
 
 ``--backend=array`` runs the microbenchmark AND the compiled TPC-H
 multi-table sweeps on the vmap-able array substrate
-(``repro.core.array_sim``: LRU + PBM; CScan/OPT stay on the event
-engine) with the same CSV/JSON row schema, and measures batched
-(vmapped) buffer sweeps against sequential event-engine runs of the
-same points (micro + TPC-H races).
+(``repro.core.array_sim``) for EVERY registered array policy — the
+paper's full four-way comparison (lru / cscan / pbm / opt), policy lists
+derived from ``repro.core.policy_registry`` — with the same CSV/JSON row
+schema, and measures batched (vmapped) buffer sweeps against sequential
+event-engine runs of the same points (micro + TPC-H races).
 """
 
 from __future__ import annotations
@@ -61,8 +62,9 @@ def main() -> None:
     print("# === microbenchmark (paper Figs 11-13) ===", file=sys.stderr)
     rows = []
     if args.backend == "array":
-        print("# backend=array: LRU/PBM on repro.core.array_sim "
-              "(CScan/OPT remain event-engine-only)", file=sys.stderr)
+        print("# backend=array: all four paper policies "
+              f"({', '.join(microbench.ARRAY_POLICIES)}) on "
+              "repro.core.array_sim", file=sys.stderr)
         for s in sweeps:
             rows.extend(microbench.sweep_array(
                 s, microbench.ARRAY_POLICIES, scale=scale))
@@ -99,8 +101,11 @@ def main() -> None:
         # does not yet) — trend.py compares like against like across runs.
         tpch_scale = tpch.SMOKE_SCALE if args.smoke else scale
         for s in sweeps:
+            # --smoke uses the coarse 2-page step (the races' fast mode):
+            # the four-policy 24-lane vmapped sweep stays in the CI budget
             rows.extend(tpch.sweep_array(
-                s, tpch.ARRAY_POLICIES, scale=tpch_scale))
+                s, tpch.ARRAY_POLICIES, scale=tpch_scale,
+                step_pages=2.0 if args.smoke else 1.0))
         tpch_name = "tpch_array.json"
     else:
         for s in sweeps:

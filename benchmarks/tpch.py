@@ -5,11 +5,16 @@ permutations), ~7.5GB accessed with 8 streams.  Defaults match the paper's
 operating point: 600 MB/s I/O, buffer = 30% of accessed volume.
 
 ``--backend=array`` lowers the multi-table workload through
-``repro.core.array_sim.compiler`` and runs LRU/PBM on the vmap-able array
-substrate: every (policy x sweep-point) lane of a sweep executes as ONE
-batched computation (CScan/OPT stay on the event engine).  ``--smoke``
-restricts to the buffer sweep at a quick scale — the CI configuration
-(same flag semantics as ``benchmarks/microbench.py``).
+``repro.core.array_sim.compiler`` and runs the FULL paper policy set
+(lru / cscan / pbm / opt) on the vmap-able array substrate: every
+(policy x sweep-point) lane of a sweep executes as ONE batched
+computation.  ``--smoke`` restricts to the buffer sweep at a quick scale
+— the CI configuration (same flag semantics as
+``benchmarks/microbench.py``).
+
+Policy lists come from ``repro.core.policy_registry`` — one source of
+truth for both backends; unknown names fail there with the known-name
+list.
 """
 
 from __future__ import annotations
@@ -20,10 +25,11 @@ import time
 from typing import Dict, List
 
 from repro.core import EngineConfig, run_workload, simulate_belady
+from repro.core.policy_registry import names as policy_names
 from repro.core.workload import make_tpch_db, tpch_accessed_bytes, tpch_streams
 
-POLICIES = ["lru", "cscan", "pbm", "opt"]
-ARRAY_POLICIES = ["lru", "pbm"]  # cscan/opt stay on the event engine
+POLICIES = policy_names(backend="event", paper_only=True)
+ARRAY_POLICIES = policy_names(backend="array")
 
 DEFAULTS = dict(n_streams=8, bandwidth=600e6, buffer_frac=0.3, seed=7)
 #: --smoke scale per backend.  The array smoke runs at 0.05 (the batched
@@ -118,15 +124,21 @@ def sweep(which: str, policies: List[str], scale: float = 1.0, seed: int = 7):
     return out
 
 
-def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7):
-    """Array-backend TPC-H sweep: same row schema as :func:`sweep` for the
-    LRU + PBM array policies.
+def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7,
+                step_pages: float = 1.0):
+    """Array-backend TPC-H sweep: same row schema as :func:`sweep` for
+    every registered array policy (the paper's full four-way comparison).
 
     For the buffer and bandwidth axes the workload shape is constant, so
     the compiled spec is lowered once and EVERY (policy x point) lane runs
-    in one ``jax.vmap`` call — the generic runner treats policy, capacity
-    and bandwidth as traced config scalars.  The streams axis changes the
-    spec shape per point and falls back to per-point batched-policy runs.
+    in one ``jax.vmap`` call — the runner is compiled over the whole
+    policy set and treats policy, capacity and bandwidth as traced config
+    scalars.  The streams axis changes the spec shape per point and falls
+    back to per-point batched-policy runs.  ``step_pages=2.0`` is the
+    coarse fast mode the batched races use (~2x fewer steps for a few %
+    fidelity) — the CI smoke runs the 24-lane sweep with it to stay
+    inside the job budget; validation always runs full fidelity
+    (``validate.py``).
     """
     import jax
 
@@ -169,7 +181,8 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7):
         ws = tpch_accessed_bytes(db, streams)
         spec = compile_workload(db, streams)
         runner = make_runner(spec, bandwidth_ref=DEFAULTS["bandwidth"],
-                             time_slice=time_slice)
+                             time_slice=time_slice, policies=policies,
+                             step_pages=step_pages)
         lanes, cfgs = [], []
         for p in points:
             frac = p if which == "buffer" else DEFAULTS["buffer_frac"]
@@ -190,7 +203,8 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7):
             ws = tpch_accessed_bytes(db, streams)
             spec = compile_workload(db, streams)
             runner = make_runner(spec, bandwidth_ref=DEFAULTS["bandwidth"],
-                                 time_slice=time_slice)
+                                 time_slice=time_slice, policies=policies,
+                                 step_pages=step_pages)
             cap = max(1 << 22, int(DEFAULTS["buffer_frac"] * ws))
             lanes = [(p, pol) for pol in policies]
             cfgs = [make_config(spec, cap, DEFAULTS["bandwidth"], pol)
@@ -246,7 +260,7 @@ def batched_tpch_race(scale: float = 1.0, seed: int = 7, fracs=None,
     event_wall = time.time() - t0
 
     runner = make_runner(spec, bandwidth_ref=DEFAULTS["bandwidth"],
-                         time_slice=time_slice, static_policy=policy,
+                         time_slice=time_slice, policies=(policy,),
                          step_pages=2.0)
     vrun = jax.jit(jax.vmap(runner))
     cfgs = stack_configs([
@@ -318,7 +332,8 @@ def main() -> None:
     rows = []
     for s in sweeps:
         if args.backend == "array":
-            rows.extend(sweep_array(s, ARRAY_POLICIES, scale=scale))
+            rows.extend(sweep_array(s, ARRAY_POLICIES, scale=scale,
+                                    step_pages=2.0 if args.smoke else 1.0))
         else:
             rows.extend(sweep(s, POLICIES, scale=scale))
     if args.backend == "array":

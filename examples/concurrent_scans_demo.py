@@ -10,12 +10,13 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.core import EngineConfig, run_workload, simulate_belady
+from repro.core.policy_registry import names as policy_names
 from repro.core.stats import sharing_potential
 from repro.core.workload import (
     make_lineitem_db, micro_accessed_bytes, micro_streams,
 )
 
-POLICIES = ["lru", "mru", "cscan", "pbm", "pbm_lru", "attach", "opt"]
+POLICIES = policy_names(backend="event")  # all seven, registry order
 
 
 def main():

@@ -3,6 +3,7 @@ buffer-management policies (LRU/MRU, Cooperative Scans' ABM, PBM, OPT, and
 the paper's sketched-but-unbuilt PBM/LRU and Attach&Throttle variants), and
 the concurrent-scan execution engine + workloads of the evaluation."""
 
+from . import policy_registry
 from .pages import Column, Database, Page, PageId, Table
 from .pdt import PDT, CScanMergeState
 from .snapshots import Snapshot, SnapshotManager, classify_chunks
@@ -21,6 +22,6 @@ __all__ = [
     "Database", "Engine", "EngineConfig", "EngineResult", "LRUPolicy",
     "MRUPolicy", "OraclePolicy", "PBMLRUPolicy", "PBMPolicy", "PDT", "Page",
     "PageId", "Policy", "ScanSpec", "ScanState", "Snapshot",
-    "SnapshotManager", "Table", "classify_chunks", "run_workload",
-    "simulate_belady",
+    "SnapshotManager", "Table", "classify_chunks", "policy_registry",
+    "run_workload", "simulate_belady",
 ]

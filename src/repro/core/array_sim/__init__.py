@@ -2,8 +2,17 @@
 
 Re-implements the buffer pool + scan machinery of ``repro.core.engine``
 as fixed-shape JAX arrays with a pure ``step(state, cfg) -> state``:
-one ``jax.vmap`` call batches an entire sweep axis, and the PBM bucketed
-timeline runs as a Pallas kernel on TPU (jnp oracle elsewhere).
+one ``jax.vmap`` call batches an entire sweep axis, and the batched
+eviction selection runs as a Pallas kernel on TPU (jnp oracle elsewhere).
+
+Buffer policies are *data*: the step drives a tuple of
+:class:`~repro.core.array_sim.policies.ArrayPolicy` objects (pure-pytree
+state + jit/vmap-safe hooks) and dispatches eviction on the score arrays
+they provide, resolved by name through ``repro.core.policy_registry`` —
+the same table the event engine uses.  All four paper policies run on
+this substrate: in-order LRU/PBM/OPT, and CScan via the chunk-granular
+cooperative substrate (``array_sim.coop``), blended per-lane so one
+vmapped call covers a whole four-policy sweep.
 
 Scans advance with the engine's per-page plan-trigger semantics (each
 column keeps a fractional frontier cursor and blocks only at absent
@@ -31,11 +40,23 @@ from .sim import (
     make_config,
     make_runner,
     make_step,
+    resolve_policies,
     result_from_state,
     run_workload_array,
     stack_configs,
 )
-from .policies import next_consumption, target_buckets, time_to_bucket
+from .policies import (
+    ArrayCScan,
+    ArrayLRU,
+    ArrayOPT,
+    ArrayPBM,
+    ArrayPolicy,
+    StepCtx,
+    next_consumption,
+    shift_timeline,
+    target_buckets,
+    time_to_bucket,
+)
 from .validate import (
     cross_validate,
     cross_validate_sweep,
@@ -44,11 +65,17 @@ from .validate import (
 )
 
 __all__ = [
+    "ArrayCScan",
+    "ArrayLRU",
+    "ArrayOPT",
+    "ArrayPBM",
+    "ArrayPolicy",
     "ArrayResult",
     "ArraySimConfig",
     "POLICY_IDS",
     "SimSpec",
     "SimState",
+    "StepCtx",
     "build_spec",
     "compile_workload",
     "cross_validate",
@@ -61,8 +88,10 @@ __all__ = [
     "make_runner",
     "make_step",
     "next_consumption",
+    "resolve_policies",
     "result_from_state",
     "run_workload_array",
+    "shift_timeline",
     "stack_configs",
     "target_buckets",
     "time_to_bucket",

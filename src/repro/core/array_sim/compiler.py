@@ -90,6 +90,7 @@ def compile_workload(
     firsts: List[float] = []
     lasts: List[float] = []
     pcols: List[int] = []
+    page_rows: List[Tuple[int, float]] = []   # (table idx, first tuple)
     col_start = np.zeros(C, np.int32)
     col_npages = np.zeros(C, np.int32)
     col_tpp = np.zeros(C, np.float32)
@@ -115,6 +116,7 @@ def compile_workload(
             firsts.append(p.first_tuple)
             lasts.append(p.last_tuple)
             pcols.append(ci)
+            page_rows.append((tindex[tname], p.first_tuple))
         off += len(col.pages)
 
     P = ((off + PAGE_PAD - 1) // PAGE_PAD) * PAGE_PAD
@@ -124,6 +126,14 @@ def compile_workload(
     page_last = np.asarray(lasts + [0] * pad, np.float32)
     page_col = np.asarray(pcols + [0] * pad, np.int32)
     page_valid = np.asarray([True] * off + [False] * pad, bool)
+
+    # ---- chunk geometry (the cooperative substrate's unit) ---------------
+    from .coop import chunk_geometry
+
+    n_chunks, chunk_first, chunk_last, chunk_table, page_chunk0 = \
+        chunk_geometry(db, tnames, page_rows)
+    page_chunk = np.zeros(P, np.int32)
+    page_chunk[:off] = page_chunk0
 
     # ---- per-stream query rows -------------------------------------------
     S = len(streams)
@@ -183,4 +193,9 @@ def compile_workload(
         table_names=tuple(tnames),
         col_table=col_table,
         q_table=q_table,
+        n_chunks=n_chunks,
+        page_chunk=page_chunk,
+        chunk_first=chunk_first,
+        chunk_last=chunk_last,
+        chunk_table=chunk_table,
     )

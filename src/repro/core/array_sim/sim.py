@@ -4,9 +4,12 @@ The event engine (``repro.core.engine``) replays the paper's machine one
 heapq event at a time in Python.  This module re-expresses the same system
 as a **pure, fixed-shape array program**:
 
-* per-page state (residency, LRU clock, PBM bucket, FIFO request stamp)
-  and per-stream state (query index, cursor, speed estimate) live in dense
-  JAX arrays (:class:`SimState`);
+* per-page state (residency, LRU clock, FIFO request stamp) and
+  per-stream state (query index, cursor, speed estimate) live in dense
+  JAX arrays (:class:`SimState`); policy-private state (PBM's bucket
+  timeline, CScan's chunk flags) rides along as pure pytrees owned by
+  the compiled :class:`~repro.core.array_sim.policies.ArrayPolicy`
+  objects;
 * a pure ``step(state, cfg) -> state`` advances the whole machine by one
   page-transfer time ``dt`` — scans consume tuples with the engine's
   **per-page plan-trigger semantics**: each column keeps a fractional
@@ -14,17 +17,25 @@ as a **pure, fixed-shape array program**:
   its trigger (``max(page_first, scan_start)``), and a scan blocks exactly
   at the earliest absent trigger across its columns — never on pages whose
   trigger it already crossed.  A bandwidth-budgeted I/O server pops the
-  request FIFO; the plugged policy (array LRU or array PBM) picks batched
-  eviction victims.  Because a blocked scan pins nothing and a running
-  burst pins only its last ~``segment_pages`` plan entries, pools far
-  below ``streams x columns`` pages stay live — the paper's small-buffer
-  operating points (10-40%) run on this substrate, cross-validated
-  against the event engine (see ``validate.ERROR_BARS``);
+  request FIFO; eviction dispatches on the **score arrays the compiled
+  policies provide** (``ArrayPolicy.score_victims`` through the batched
+  eviction kernel) — the step itself knows no policy by name or id.
+  Because a blocked scan pins nothing and a running burst pins only its
+  last ~``segment_pages`` plan entries, pools far below ``streams x
+  columns`` pages stay live — the paper's small-buffer operating points
+  (10-40%) run on this substrate, cross-validated against the event
+  engine (see ``validate.ERROR_BARS``);
 * steps come in two flavours on the paper's own cadence: *within* a PBM
   time slice the bucketed timeline is static (cheap step: consume, load,
   evict), and once per ``time_slice`` a *refresh* step recomputes every
-  page's estimated next consumption, re-buckets transitions, and shifts
-  the timeline — ``RefreshRequestedBuckets`` as one vector op;
+  page's estimated next consumption — the policies see the boundary as
+  the static ``refresh`` flag of their observation window
+  (:class:`~repro.core.array_sim.policies.StepCtx`);
+* a **cooperative** policy (array-CScan) inverts the control flow: when
+  one is compiled in, the step also runs the chunk-granular ABM
+  substrate (``array_sim.coop``) and blends per-lane between the
+  in-order and cooperative models by the traced policy id — so a vmapped
+  sweep mixes all four paper policies in ONE batched call;
 * everything is ``jax.jit``- and ``jax.vmap``-compatible, so an entire
   sweep axis (buffer sizes x bandwidths x policies) runs as ONE batched
   computation instead of N serial Python event loops;
@@ -36,21 +47,24 @@ as a **pure, fixed-shape array program**:
   never branches on a table id, which is what keeps the TPC-H throughput
   run (Figs 14-16) on the same jit/vmap path as the microbenchmark.
 
-The PBM hot path — timeline shift + spill + batched Belady-rule eviction
-— is dispatched through ``repro.kernels.ops.pbm_timeline_step``: a Pallas
-kernel on TPU, its jnp oracle elsewhere.
+Policy names resolve through ``repro.core.policy_registry`` — the single
+table shared with the event engine; the traced ``cfg.policy`` carries the
+registry's stable array id.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import List, NamedTuple, Optional, Sequence
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .policies import BIG_CUT, next_consumption, target_buckets
+from .. import policy_registry
+from . import coop as coop_mod
+from .policies import BIG_CUT, ArrayPolicy, StepCtx
 from .spec import SimSpec
 
 _REQ_NONE = 1 << 24   # FIFO stamp sentinel: page not currently requested
@@ -77,7 +91,7 @@ class ArraySimConfig(NamedTuple):
 
     capacity_bytes: jax.Array   # f32 buffer-pool capacity
     bandwidth: jax.Array        # f32 bytes/sec of the I/O server
-    policy: jax.Array           # i32: 0 = LRU, 1 = PBM
+    policy: jax.Array           # i32 registry array id (policy_registry)
     max_time: jax.Array         # f32 livelock guard
 
 
@@ -85,7 +99,6 @@ class SimState(NamedTuple):
     # ---- per-page (P,) ---------------------------------------------------
     resident: jax.Array       # bool
     last_used: jax.Array      # f32 LRU clock
-    bucket: jax.Array         # i32 PBM timeline position (nb == not-requested)
     req_step: jax.Array       # i32 FIFO stamp: step the page was first wanted
     req_tie: jax.Array        # i32 within-cohort service rank fixed at stamp
     fresh: jax.Array          # bool: loaded but not consumed since (churn)
@@ -105,6 +118,8 @@ class SimState(NamedTuple):
     loads: jax.Array          # i32 lifetime page loads
     loads_demand: jax.Array   # i32 loads granted for a blocking frontier
     churn: jax.Array          # i32 loads evicted before any consumption
+    # ---- policy-private state (one pytree per compiled ArrayPolicy) ------
+    pstate: Tuple = ()
 
 
 @dataclass
@@ -129,8 +144,38 @@ class ArrayResult:
         return self.total_io_bytes / 1e9
 
 
-POLICY_IDS = {"lru": 0, "pbm": 1}
-_POLICY_NAMES = {v: k for k, v in POLICY_IDS.items()}
+#: Deprecated alias: policy name -> stable array id.  The registry
+#: (``repro.core.policy_registry``) is the source of truth; this mapping
+#: is kept for existing callers and result JSONs.
+POLICY_IDS = policy_registry.array_ids()
+
+_warned = set()
+
+
+def _warn_once(key: str, msg: str) -> None:
+    if key not in _warned:
+        _warned.add(key)
+        warnings.warn(msg, DeprecationWarning, stacklevel=3)
+
+
+def resolve_policies(
+    policies: Optional[Sequence] = None,
+) -> Tuple[ArrayPolicy, ...]:
+    """Resolve a policy list (names and/or :class:`ArrayPolicy` objects)
+    through the registry; ``None`` means every registered array policy.
+    At most one cooperative policy may be compiled into one step."""
+    if policies is None:
+        policies = policy_registry.names(backend="array")
+    out = []
+    for p in policies:
+        out.append(policy_registry.array_policy(p) if isinstance(p, str)
+                   else p)
+    if sum(p.cooperative for p in out) > 1:
+        raise ValueError(
+            "at most one cooperative policy per compiled step, got "
+            f"{[p.name for p in out if p.cooperative]}"
+        )
+    return tuple(out)
 
 
 class _View(NamedTuple):
@@ -179,7 +224,22 @@ def make_config(
     policy: str | int = "pbm",
     max_time: float = 3e5,
 ) -> ArraySimConfig:
-    pid = POLICY_IDS[policy] if isinstance(policy, str) else int(policy)
+    """Build one traced config.  ``policy`` is a registry name; raw
+    integer ids are a deprecated shim (they still resolve — they ARE the
+    registry ids — but name strings are the contract)."""
+    if isinstance(policy, str):
+        entry = policy_registry.get(policy)
+        if entry.array_id is None:
+            raise KeyError(
+                f"policy {policy!r} is event-engine-only; array-backend "
+                f"policies: {policy_registry.names(backend='array')}"
+            )
+        pid = entry.array_id
+    else:
+        _warn_once("int-policy",
+                   "integer policy ids in make_config are deprecated; "
+                   "pass the registry name (e.g. policy='pbm')")
+        pid = int(policy)
     return ArraySimConfig(
         capacity_bytes=jnp.float32(capacity_bytes),
         bandwidth=jnp.float32(bandwidth),
@@ -193,13 +253,13 @@ def stack_configs(cfgs: Sequence[ArraySimConfig]) -> ArraySimConfig:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *cfgs)
 
 
-def init_state(spec: SimSpec) -> SimState:
+def init_state(spec: SimSpec,
+               policies: Sequence[ArrayPolicy] = ()) -> SimState:
     P, S = spec.n_pages, spec.n_streams
     n_q = jnp.asarray(spec.n_q)
     return SimState(
         resident=jnp.zeros(P, bool),
         last_used=jnp.full(P, -1e9, jnp.float32),
-        bucket=jnp.full(P, spec.not_requested, jnp.int32),
         req_step=jnp.full(P, _REQ_NONE, jnp.int32),
         req_tie=jnp.zeros(P, jnp.int32),
         fresh=jnp.zeros(P, bool),
@@ -217,11 +277,12 @@ def init_state(spec: SimSpec) -> SimState:
         loads=jnp.int32(0),
         loads_demand=jnp.int32(0),
         churn=jnp.int32(0),
+        pstate=tuple(p.init_state(spec) for p in policies),
     )
 
 
 def _evict_candidates(spec: SimSpec) -> int:
-    """Eviction-candidate window (``vmax``) for the timeline kernel: the
+    """Eviction-candidate window (``vmax``) for the eviction kernel: the
     top-k priority pages considered per eviction call must cover a whole
     amortised batch (16 pages) of *maximum-size* pages even when the
     priority order is led by small column-tail / dimension-table pages —
@@ -239,23 +300,26 @@ def _evict_candidates(spec: SimSpec) -> int:
 
 def make_step(spec: SimSpec, dt: float, time_slice: float,
               prefetch_pages: int = 8, refresh: bool = False,
-              static_policy: Optional[str] = None,
+              policies: Sequence[ArrayPolicy] = ("lru", "pbm"),
               vmax: Optional[int] = None):
-    """Build the pure ``step(state, cfg) -> state``.
+    """Build the pure ``step(state, cfg) -> state`` for a policy set.
 
-    ``refresh=False`` is the cheap within-slice step: the PBM timeline is
-    static except for the pages whose estimate just changed — this step's
-    loads and the triggers just crossed.  ``refresh=True`` is the once-per-
-    ``time_slice`` boundary step that recomputes every page's next
-    consumption (plan-trigger granular), demotes no-longer-requested
-    pages, drops dead queue entries, and shifts the timeline one slice
-    (spilled buckets re-bucket at the fresh estimate).
+    ``refresh=False`` is the cheap within-slice step; ``refresh=True`` is
+    the once-per-``time_slice`` boundary step (the policies' ``StepCtx``
+    carries the flag; PBM recomputes every page's next consumption and
+    shifts its timeline there, and the step drops dead request-queue
+    entries).  ``policies`` are the lanes this step can serve: a config's
+    ``cfg.policy`` (registry array id) selects per lane between the
+    policy-provided score/readahead/tie arrays — the step itself contains
+    no per-policy branches.  Compiling a single policy specialises the
+    step (no stacking, no unused machinery); compiling a cooperative
+    policy (array-CScan) additionally builds the chunk-granular ABM
+    substrate and blends the two consumption models per lane.
     """
     from repro.kernels import ops as kops
 
+    policies = resolve_policies(policies)
     P, S, Q, C = spec.n_pages, spec.n_streams, spec.n_queries, spec.n_cols
-    NR = spec.not_requested
-    nb, m = spec.nb, spec.buckets_per_group
     vmax = _evict_candidates(spec) if vmax is None else int(vmax)
     K = int(prefetch_pages)
     # deepest per-column readahead actually reachable: the plan-entry-count
@@ -284,6 +348,32 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
     s_idx = jnp.arange(S)
     max_page = jnp.float32(float(np.max(spec.page_size)))
     INF = jnp.float32(np.inf)
+
+    # ---- policy dispatch tables (policy-provided, id-indexed) ------------
+    n_pol = len(policies)
+    ids = policy_registry.array_ids()
+    max_id = max(ids.values())
+    lookup_np = np.zeros(max_id + 1, np.int32)
+    valid_np = np.zeros(max_id + 1, bool)
+    for j, p in enumerate(policies):
+        lookup_np[ids[p.name]] = j
+        valid_np[ids[p.name]] = True
+    lookup = jnp.asarray(lookup_np)
+    id_valid = jnp.asarray(valid_np)
+    k_wins_np = np.asarray([p.request_window(spec, K) for p in policies],
+                           np.int32)
+    coop_idx = next((j for j, p in enumerate(policies) if p.cooperative),
+                    None)
+    has_coop = coop_idx is not None
+    coop_flags = jnp.asarray([p.cooperative for p in policies])
+    if has_coop:
+        cc = coop_mod.coop_consts(spec)
+        if spec.q_table is None:
+            raise ValueError(
+                "cooperative policy needs the multitable query-table map; "
+                "lower the workload with compiler.compile_workload"
+            )
+        q_table = jnp.asarray(spec.q_table)
 
     def query_view(qidx, pos) -> _View:
         """Gather the per-stream view of the current query + per-column
@@ -329,9 +419,31 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         return _View(active, length, rate, cols, start, cur, end, eps,
                      frontier, fpidx, ftrig, fneed)
 
+    def _sel(is_coop, coop_val, inorder_val):
+        """Per-lane blend between the cooperative and in-order models.
+        Specialises away when the compiled policy set is single-model."""
+        if not has_coop:
+            return inorder_val
+        if n_pol == 1:
+            return coop_val
+        return jnp.where(is_coop, coop_val, inorder_val)
+
     def step(carry, cfg: ArraySimConfig):
         state, view = carry
-        t2 = state.t + dt
+        # a config whose policy id is NOT in this step's compiled set must
+        # not silently run as some other policy (a mislabeled lane in a
+        # stacked sweep would be wrong science with no diagnostic).  A jit
+        # step cannot raise, so an invalid lane trips the livelock guard
+        # on its first step: the run terminates immediately with every
+        # stream unfinished and ``extras["truncated"] = True`` — the flag
+        # every harness already refuses to compare.
+        ok_id = (
+            (cfg.policy >= 0) & (cfg.policy <= max_id)
+            & id_valid[jnp.clip(cfg.policy, 0, max_id)]
+        )
+        t2 = state.t + jnp.where(ok_id, dt, cfg.max_time + 1.0)
+        pol_local = lookup[jnp.clip(cfg.policy, 0, max_id)]
+        is_coop = coop_flags[pol_local] if has_coop else False
 
         # ============ CPU: consume up to the first absent trigger =========
         (active, length, rate, _cols, start, cur, end, eps, frontier,
@@ -384,16 +496,36 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         adv_lim = jnp.min(jnp.minimum(lim, cap), axis=1)    # (S,)
         runnable = active & (adv_lim > 0.0)
         remaining = length - state.pos
-        adv = jnp.where(
+        adv_io = jnp.where(
             runnable,
             jnp.minimum(jnp.minimum(rate_j * dt, remaining), adv_lim),
             0.0,
         )
-        adv = jnp.maximum(adv, 0.0)
-        cur2_pre = cur + adv
+        adv_io = jnp.maximum(adv_io, 0.0)
 
         margin = jnp.maximum(0.5, 3e-5 * length)
-        finished = runnable & (remaining - adv <= margin)
+        finished_io = runnable & (remaining - adv_io <= margin)
+
+        # ============ cooperative CPU model (compiled on demand) ==========
+        if has_coop:
+            cstate: coop_mod.CoopState = state.pstate[coop_idx]
+            q_tab = q_table[s_idx, jnp.clip(state.qidx, 0, Q - 1)]
+            coop_cpu = coop_mod.cpu_phase(
+                cc, cstate, active=active, start=start, end=end,
+                cols=_cols, q_tab=q_tab, rate_j=rate_j, dt=dt,
+                credit_cap=rate_j * dt, resident=state.resident,
+                page_col=page_col, page_valid=page_valid, s_idx=s_idx,
+            )
+            adv = _sel(is_coop, coop_cpu.adv, adv_io)
+            finished = _sel(is_coop, coop_cpu.finished, finished_io)
+        else:
+            adv, finished = adv_io, finished_io
+        # invalid-lane freeze (see ok_id above): no consumption, no
+        # completions — the lane must end truncated, not half-run
+        adv = jnp.where(ok_id, adv, 0.0)
+        finished = finished & ok_id
+        cur2_pre = cur + adv_io
+
         qidx2 = state.qidx + finished.astype(jnp.int32)
         pos2 = jnp.where(finished, 0.0, state.pos + adv)
         newly_done = (qidx2 >= n_q) & (state.stream_done_t < 0)
@@ -432,6 +564,8 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             & state.resident[w_pidx[:, :, :W]]
             & (w_trig[:, :, :W] < (cur2_pre - eps)[:, None, None])
         )
+        if has_coop:
+            crossed = crossed & jnp.logical_not(is_coop)
         cross_pidx = w_pidx[:, :, :W]
         # engine parity: the LRU clock ticks when a page is consumed, and
         # only the pages of the running burst are pinned — a blocked scan
@@ -439,10 +573,13 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         last_used2 = state.last_used.at[cross_pidx].max(
             jnp.where(crossed, t2 + jit_p[cross_pidx], -INF)
         )
+        if has_coop:
+            touched_coop = is_coop & coop_cpu.consumed_pages
+            last_used2 = jnp.where(touched_coop, t2 + jit_p, last_used2)
 
         # ================= post-advance view (I/O demand) =================
         view2 = query_view(qidx2, pos2)
-        (active2, _l2, _r2, cols2, start2, cur2, end2, eps2, frontier2,
+        (active2, _l2, rate2, cols2, start2, cur2, end2, eps2, frontier2,
          fpidx2, ftrig2, need2) = view2
 
         # request set = the engine's plan window: the blocking page (the
@@ -503,23 +640,15 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         )
         gate_p = _GATE_P * (1.0 - duty_g)
         gate = (
-            (adv > 0.0) | (state.steps == 0) | finished | (ug < gate_p)
+            (adv_io > 0.0) | (state.steps == 0) | finished | (ug < gate_p)
         )
-        # calibrated per policy: the engine's 8-entry window underfeeds the
-        # array LRU at deep thrash (its requests are colder); a slightly
-        # wider LRU window restores the engine's churn level.  The widening
-        # is a SINGLE-TABLE deep-thrash calibration (micro 0.1-0.2 buffer):
-        # on multi-table workloads the same +2 overfeeds churn at the
-        # paper's TPC-H operating points (30-50% buffer, mild pressure,
-        # +16% I/O at 0.5 buffer), where the engine's own window width
-        # tracks it within the validation bars — so it is keyed off there.
-        lru_w = K + 2 if spec.n_tables == 1 else K
-        if static_policy is None:
-            k_win = jnp.where(cfg.policy == 1, K, lru_w)
-        elif static_policy == "pbm":
-            k_win = K
+        # per-policy readahead width (ArrayPolicy.request_window): e.g. the
+        # array LRU widens the engine's 8-entry window at single-table
+        # deep thrash — a policy-provided value, indexed by the lane's id
+        if n_pol == 1:
+            k_win = int(k_wins_np[0])
         else:
-            k_win = lru_w
+            k_win = jnp.asarray(k_wins_np)[pol_local]
         # the blocking demand is exempt from the gate: the engine requests
         # the page it blocks on unconditionally, and a frontier page that
         # was resident at the block transition but evicted during the wait
@@ -571,15 +700,16 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         req_tie2 = jnp.where(new_stamp, tie_now, state.req_tie)
         tie_blk = 32767 - req_tie2
         tie_idx = 32767 - jnp.arange(P, dtype=jnp.int32)
-        # calibrated per policy: LRU tracks the engine best with the
-        # stream-block cohort order; PBM with the plan-deterministic index
-        # order (its bucket estimates already absorb the noise)
-        if static_policy is None:
-            tie15 = jnp.where(cfg.policy == 1, tie_idx, tie_blk)
-        elif static_policy == "pbm":
-            tie15 = tie_idx
+        # per-policy cohort order (ArrayPolicy.fifo_tie): the array LRU
+        # tracks the engine best with the stream-block order; estimate-
+        # driven policies with the plan-deterministic index order (their
+        # scores already absorb the timing noise)
+        tie_tab = [tie_idx if p.fifo_tie == "plan" else tie_blk
+                   for p in policies]
+        if n_pol == 1:
+            tie15 = tie_tab[0]
         else:
-            tie15 = tie_blk
+            tie15 = jnp.stack(tie_tab)[pol_local]
         load_key = jnp.where(wanted, stamp_age * 32768 + tie15, -1)
 
         # ================= I/O server: budgeted admission =================
@@ -606,7 +736,27 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             & (b_trig >= (cur2 - seg_len)[:, None, None])
         )
         pin = jnp.zeros(P, jnp.int32).at[b_pidx].max(burst.astype(jnp.int32))
-        evictable = state.resident & (pin == 0) & page_valid
+        evictable_io = state.resident & (pin == 0) & page_valid
+
+        # ============ cooperative I/O model (compiled on demand) ==========
+        if has_coop:
+            done3 = coop_mod.clear_on_query_change(
+                coop_cpu.done, coop_cpu.finished
+            )
+            q_tab2 = q_table[s_idx, jnp.clip(qidx2, 0, Q - 1)]
+            coop_io = coop_mod.io_phase(
+                cc, done=done3, cur_chunk=coop_cpu.cur_chunk,
+                inflight=cstate.inflight, pin_pages=coop_cpu.pin_pages,
+                active=active2, start=start2, end=end2, cols=cols2,
+                q_tab=q_tab2, resident=state.resident, free=free,
+                page_chunk_sizes=page_size, page_col=page_col,
+                page_valid=page_valid, n_streams=S,
+            )
+            load_key = _sel(is_coop, coop_io.load_key, load_key)
+            wanted = _sel(is_coop, coop_io.wanted, wanted)
+            evictable = _sel(is_coop, coop_io.evictable, evictable_io)
+        else:
+            evictable = evictable_io
         evictable_bytes = jnp.sum(page_size * evictable)
         headroom = free + evictable_bytes
         credit = state.io_credit + cfg.bandwidth * dt
@@ -618,7 +768,8 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         kcur = load_key
         taken = jnp.float32(0.0)
         open_ = jnp.bool_(True)
-        budget = jnp.minimum(credit, headroom)
+        # an invalid lane's server grants nothing (ok_id freeze)
+        budget = jnp.where(ok_id, jnp.minimum(credit, headroom), 0.0)
         arange_p = jnp.arange(P)
         hit = jnp.zeros(P, bool)
         cand = []
@@ -668,86 +819,87 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             ud < _DIP_P, jnp.minimum(_DIP_DEPTH * eff_rate, speed2), speed2
         )
 
-        # ================= PBM bookkeeping ================================
+        # ================= policy hooks + batched eviction ================
+        ctx = StepCtx(
+            spec=spec, refresh=refresh, time_slice=time_slice_f, now=t2,
+            steps=state.steps, time_passed=state.time_passed, dt=dt,
+            page_first=page_first, page_last=page_last, page_col=page_col,
+            page_valid=page_valid, resident=state.resident,
+            last_used=last_used2, load_mask=load_mask, load_cand=cand,
+            load_ok=cand_ok, cross_pidx=cross_pidx, crossed=crossed,
+            active=active2, cols=cols2, cur=cur2, end=end2, start=start2,
+            eps=eps2, rate=rate2, speed_push=speed_push,
+            coop=coop_io if has_coop else None,
+        )
+        pstate2 = []
+        for j, (p, ps) in enumerate(zip(policies, state.pstate)):
+            if p.cooperative:
+                # the cooperative substrate owns its state transitions
+                pstate2.append(coop_mod.CoopState(
+                    done=done3, cur_chunk=coop_cpu.cur_chunk,
+                    chunk_pos=coop_cpu.chunk_pos, credit=coop_cpu.credit,
+                    inflight=coop_io.inflight,
+                ))
+            else:
+                pstate2.append(p.on_consume(p.on_request(ps, ctx), ctx))
+        keys = [p.score_victims(ps, ctx)
+                for p, ps in zip(policies, pstate2)]
+        if n_pol == 1:
+            key = keys[0]
+        else:
+            key = jnp.stack(keys)[pol_local]
+
         if refresh:
-            # slice boundary: full PageNextConsumption recompute (trigger-
-            # granular: consumed pages drop out per column), bucket
-            # transitions, and one timeline shift with spill re-bucketing
-            eta = next_consumption(page_first, page_last, page_col, cols2,
-                                   cur2, end2, speed_push, active2,
-                                   scan_start=start2, eps=eps2)
-            b_target = target_buckets(eta, time_slice_f, spec.n_groups, m,
-                                      page_valid)
-            interested = (eta < BIG_CUT) & page_valid
-            assign = (
-                load_mask | ((state.bucket == NR) & interested)
-                | (b_target == 0)
-            )
-            bucket_pre = jnp.where(
-                ~interested, NR, jnp.where(assign, b_target, state.bucket)
-            ).astype(jnp.int32)
             # query-end request drop, slice-quantised: pending requests for
             # pages no active scan is interested in leave the queue
+            interested = (ctx.eta_estimate() < BIG_CUT) & page_valid
             req_step2 = jnp.where(interested, req_step2, _REQ_NONE)
-            k_shift = jnp.int32(1)
             time_passed2 = state.time_passed + 1
         else:
-            # within a slice the timeline is static except for the pages
-            # that just changed estimate: the loads of this step and the
-            # triggers just crossed (the dict impl re-pushes a page on
-            # every load and consume event) — one fused gather/scatter
-            upd = jnp.concatenate([cand, cross_pidx.reshape(-1)])
-            upd_on = jnp.concatenate([cand_ok, crossed.reshape(-1)])
-            eta_u = next_consumption(
-                page_first[upd], page_last[upd], page_col[upd],
-                cols2, cur2, end2, speed_push, active2,
-                scan_start=start2, eps=eps2,
-            )
-            b_u = target_buckets(
-                eta_u, time_slice_f, spec.n_groups, m,
-                jnp.ones(upd.shape[0], bool),
-            )
-            # combining (min) scatter with an NR+1 sentinel for off entries:
-            # duplicate ON entries of one page carry identical b_u (eta is a
-            # function of the page alone), so the result is deterministic
-            # even when a page appears both on and off in ``upd``
-            new_b = jnp.full(P, NR + 1, jnp.int32).at[upd].min(
-                jnp.where(upd_on, b_u, NR + 1)
-            )
-            bucket_pre = jnp.where(new_b <= NR, new_b, state.bucket)
-            b_target = bucket_pre                      # no spill when k=0
-            k_shift = jnp.int32(0)
             time_passed2 = state.time_passed
 
         # engine parity: evictions are amortised in batches (>= 16 pages),
-        # so a triggered eviction frees up to a whole batch, not one page
+        # so a triggered eviction frees up to a whole batch, not one page.
+        # The cooperative server instead evicts exactly the victims its
+        # chunk needs (ABM plans evictions per load decision).
         batch = jnp.minimum(16 * max_page, cfg.capacity_bytes)
-        need_free = jnp.where(
+        need_io = jnp.where(
             load_bytes > free,
             jnp.minimum(jnp.maximum(load_bytes, batch) - free,
                         evictable_bytes),
             0.0,
         )
-        bucket_out, evict = kops.pbm_timeline_step(
-            bucket_pre, b_target, last_used2, page_size, evictable,
-            state.time_passed, k_shift, need_free, cfg.policy, t2,
-            nb=nb, m=m, vmax=vmax,
-        )
+        if has_coop:
+            need_coop = jnp.where(
+                load_bytes > free,
+                jnp.minimum(load_bytes - free, evictable_bytes),
+                0.0,
+            )
+            need_free = _sel(is_coop, need_coop, need_io)
+        else:
+            need_free = need_io
+        evict = kops.batched_evict(key, page_size, evictable, need_free,
+                                   vmax=vmax)
 
         resident2 = (state.resident & ~evict) | load_mask
         last_used3 = jnp.where(load_mask, t2 + jit_p, last_used2)
         # churn diagnostic: a page evicted while still "fresh" (loaded but
         # never consumed since) was a wasted load
         was_crossed = jnp.zeros(P, bool).at[cross_pidx].max(crossed)
+        if has_coop:
+            was_crossed = _sel(is_coop, coop_cpu.consumed_pages,
+                               was_crossed)
         fresh2 = jnp.where(load_mask, True,
                            state.fresh & ~was_crossed & resident2)
         churn2 = state.churn + jnp.sum(state.fresh & evict & ~was_crossed)
         req_step3 = jnp.where(load_mask, _REQ_NONE, req_step2)
+        demand_hit = load_mask & (bonus == 31)
+        if has_coop:
+            demand_hit = demand_hit & jnp.logical_not(is_coop)
 
         new_state = SimState(
             resident=resident2,
             last_used=last_used3,
-            bucket=bucket_out,
             req_step=req_step3,
             req_tie=req_tie2,
             fresh=fresh2,
@@ -763,15 +915,18 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             io_credit=io_credit2,
             io_bytes=state.io_bytes + load_bytes,
             loads=state.loads + n_load,
-            loads_demand=state.loads_demand + jnp.sum(
-                load_mask & (bonus == 31)
-            ),
+            loads_demand=state.loads_demand + jnp.sum(demand_hit),
             churn=churn2,
+            pstate=tuple(pstate2),
         )
         return new_state, view2
 
     step.query_view = query_view
+    step.policies = policies
     return step
+
+
+_UNSET = object()
 
 
 def make_runner(
@@ -780,9 +935,10 @@ def make_runner(
     time_slice: float = 0.1,
     prefetch_pages: int = 8,
     max_slices: int = 80_000,
-    static_policy: Optional[str] = None,
+    policies: Optional[Sequence] = None,
     step_pages: float = 1.0,
     vmax: Optional[int] = None,
+    static_policy=_UNSET,
 ):
     """Jitted ``run(cfg) -> SimState``: steps until every stream finishes.
 
@@ -792,22 +948,37 @@ def make_runner(
     ``time_slice`` — the refresh cadence is compiled into the loop nest
     instead of branching per step.  ``step_pages > 1`` is the coarse fast
     mode for batched sweeps: ~2x fewer steps for a few % fidelity.
-    ``static_policy`` specialises the compiled step for one policy
-    (smaller readahead scatter for PBM); leave ``None`` to vmap over the
-    policy axis too.
+
+    ``policies`` is the set of registry policies the runner's lanes may
+    select (names or ``ArrayPolicy`` objects); the default is EVERY
+    registered array policy, so one runner serves a whole four-policy
+    sweep.  A single-name tuple specialises the compiled step for that
+    policy (no stacked dispatch, no unused machinery) — the fast path for
+    per-policy validation runs.  ``static_policy`` is the deprecated
+    pre-registry spelling of that single-policy case.
 
     vmap-ready: ``jax.vmap(make_runner(spec))`` over a stacked config runs
     a whole sweep axis in one call.
     """
+    if static_policy is not _UNSET:
+        _warn_once(
+            "static-policy",
+            "make_runner(static_policy=...) is deprecated; pass "
+            "policies=(name,) — resolved through repro.core."
+            "policy_registry (None still means every array policy)",
+        )
+        if static_policy is not None:
+            policies = (static_policy,)
+    pols = resolve_policies(policies)
     dt = float(step_pages) * float(np.max(spec.page_size)) / float(bandwidth_ref)
     n_inner = max(1, int(round(time_slice / dt)))
     cheap = make_step(spec, dt, time_slice, prefetch_pages, refresh=False,
-                      static_policy=static_policy, vmax=vmax)
+                      policies=pols, vmax=vmax)
     full = make_step(spec, dt, time_slice, prefetch_pages, refresh=True,
-                     static_policy=static_policy, vmax=vmax)
+                     policies=pols, vmax=vmax)
 
     def run(cfg: ArraySimConfig) -> SimState:
-        state = init_state(spec)
+        state = init_state(spec, pols)
         carry = (state, cheap.query_view(state.qidx, state.pos))
 
         def slice_body(c):
@@ -843,8 +1014,10 @@ def result_from_state(state: SimState, policy, sim_wall: float = 0.0,
     t_end = float(state.t)
     stream_times = [d if d >= 0 else t_end for d in done_t]
     unfinished = int(np.sum(done_t < 0))
-    name = _POLICY_NAMES.get(int(policy), str(policy)) \
-        if not isinstance(policy, str) else policy
+    if isinstance(policy, str):
+        name = policy
+    else:
+        name = policy_registry.array_name(int(policy)) or str(policy)
     return ArrayResult(
         policy=name,
         stream_times=stream_times,
@@ -875,9 +1048,9 @@ def run_workload_array(
     spec: Optional[SimSpec] = None,
     runner=None,
 ) -> ArrayResult:
-    """Array-backend counterpart of ``repro.core.run_workload`` for the
-    LRU / PBM policies (CScan and OPT stay on the event engine).  Accepts
-    any workload the compiler can lower — multi-table streams included.
+    """Array-backend counterpart of ``repro.core.run_workload`` for every
+    registered array policy (lru / pbm / cscan / opt).  Accepts any
+    workload the compiler can lower — multi-table streams included.
     Check ``result.extras["truncated"]`` when lowering ``max_time``: a run
     cut short by the livelock guard reports lower bounds, not results."""
     import time
@@ -889,7 +1062,8 @@ def run_workload_array(
     if runner is None:
         runner = make_runner(spec, bandwidth_ref=bandwidth,
                              time_slice=time_slice,
-                             prefetch_pages=prefetch_pages)
+                             prefetch_pages=prefetch_pages,
+                             policies=(policy_name,))
     cfg = make_config(spec, capacity_bytes, bandwidth, policy_name,
                       max_time=max_time)
     t0 = time.time()

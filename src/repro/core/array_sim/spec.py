@@ -77,6 +77,16 @@ class SimSpec(NamedTuple):
     table_names: Tuple[str, ...] = ()
     col_table: Optional[np.ndarray] = None   # i32 (C,) owning table
     q_table: Optional[np.ndarray] = None     # i32 (S, Q) table of each query
+    # ---- chunk geometry (cooperative substrate, compiler.py) -------------
+    # The paper's logical chunks (a tuple range, NOT a page set): global
+    # chunk ids across the compiled tables; a page belongs to the chunk
+    # containing its first tuple (ABM's unique-ownership rule).  Consumed
+    # by ``array_sim.coop`` for the array-CScan policy.
+    n_chunks: int = 0
+    page_chunk: Optional[np.ndarray] = None   # i32 (P,) owning chunk
+    chunk_first: Optional[np.ndarray] = None  # f32 (CH,) table-local tuples
+    chunk_last: Optional[np.ndarray] = None   # f32 (CH,) exclusive
+    chunk_table: Optional[np.ndarray] = None  # i32 (CH,) owning table
 
     @property
     def nb(self) -> int:

@@ -2,7 +2,9 @@
 
 Runs the same workloads through both simulators and reports, per
 (workload, buffer point, policy), the relative error of the two paper
-metrics (average stream time and total I/O volume).  Two suites:
+metrics (average stream time and total I/O volume).  Every registered
+array policy validates here — the paper's full four-way comparison
+(lru / cscan / pbm / opt) on both suites:
 
 * **micro** — the scaled §4.1 microbenchmark (single table, the
   original envelope of PR 1/2);
@@ -25,7 +27,14 @@ micro suite is the paper's small-buffer operating range:
   supersaturates there (its loads exceed one load per page consumption:
   sharing collapses entirely while ~23% of loads are evicted before
   first use), and the fluid step reproduces that churn spiral only
-  partially; the residual is documented in the README.
+  partially; the residual is documented in the README;
+* <= 13% for OPT (largest at the 0.4 point) — the array oracle holds
+  its victim ranking stale on the slice cadence to reproduce the event
+  oracle's burst-stale churn (see ``policies.ArrayOPT``); the residual
+  is the part of that churn the slice quantisation misses;
+* <= 15% for CScan on TPC-H (largest at the 0.5 point) — the
+  chunk-granular cooperative fluid (``array_sim.coop``) approximates
+  ABM's choose-chunk/choose-scan loop without its per-event timing.
 
 A truncated array run (``max_time``/``max_slices`` livelock guard) is a
 hard error: :func:`cross_validate` raises instead of comparing a lower
@@ -36,9 +45,15 @@ Usage::
     PYTHONPATH=src python -m repro.core.array_sim.validate            # 3-point sweep
     PYTHONPATH=src python -m repro.core.array_sim.validate --buffer-frac 0.4
     PYTHONPATH=src python -m repro.core.array_sim.validate --scale 0.1
+    PYTHONPATH=src python -m repro.core.array_sim.validate --fit-bars  # refit report
+
+``--fit-bars`` reports measured errors without enforcing, and prints
+ready-to-paste ``ERROR_BARS`` / ``TPCH_ERROR_BARS`` dict literals — the
+CI ``refit-error-bars`` job runs it at any scale, and recalibrating is a
+copy-paste of that output into this file.
 
 Exits non-zero when a point misses its error bar.  Also consumed by
-``tests/test_array_sim.py``.
+``tests/test_array_sim.py`` and ``tests/test_array_cscan_opt.py``.
 """
 
 from __future__ import annotations
@@ -49,6 +64,7 @@ import sys
 import time
 from typing import Dict, List, Optional, Sequence
 
+from .. import policy_registry
 from ..engine import EngineConfig, run_workload
 from ..workload import (
     make_lineitem_db,
@@ -62,13 +78,22 @@ from .compiler import compile_workload
 from .sim import make_runner, run_workload_array
 from .spec import build_spec
 
+#: every policy both backends can run — the paper's four-way comparison
+DEFAULT_POLICIES = tuple(policy_registry.names(backend="array"))
+
 #: validated operating envelope (buffer_frac, policy) -> max |rel err|
 ERROR_BARS = {
+    (0.1, "cscan"): 0.10,
     (0.1, "lru"): 0.13,    # engine churn spiral, partially reproduced
+    (0.1, "opt"): 0.10,
     (0.1, "pbm"): 0.10,
+    (0.2, "cscan"): 0.10,
     (0.2, "lru"): 0.10,
+    (0.2, "opt"): 0.10,
     (0.2, "pbm"): 0.10,
+    (0.4, "cscan"): 0.10,
     (0.4, "lru"): 0.10,
+    (0.4, "opt"): 0.13,    # slice-stale oracle residual (see ArrayOPT)
     (0.4, "pbm"): 0.10,
 }
 DEFAULT_FRACS = (0.1, 0.2, 0.4)
@@ -77,15 +102,24 @@ DEFAULT_FRACS = (0.1, 0.2, 0.4)
 #: fit at the quick-pass TPC-H point (scale 0.05, 4 streams, 600 MB/s,
 #: seed 7 — the paper's §4.2 operating shape scaled down like the micro
 #: bars were; re-fit at full scale via the CI ``refit-error-bars`` job).
-#: Measured at fit time: <= 5% everywhere except the 0.5-buffer points
-#: (LRU +9.9% / PBM +7.6% I/O — mild-pressure churn slightly over-
-#: reproduced), hence the one widened bar.
+#: Measured at fit time: <= 5% for lru/pbm everywhere except the
+#: 0.5-buffer points (LRU +9.9% / PBM +7.6% I/O — mild-pressure churn
+#: slightly over-reproduced); <= 8% for opt; cscan's cooperative fluid
+#: runs +8/+1/+11% on stream time (fracs 0.15/0.3/0.5), hence its two
+#: widened bars — all inside the <= 15% acceptance ceiling for the
+#: array-CScan / array-OPT ports.
 TPCH_ERROR_BARS = {
+    (0.15, "cscan"): 0.11,
     (0.15, "lru"): 0.10,
+    (0.15, "opt"): 0.10,
     (0.15, "pbm"): 0.10,
+    (0.3, "cscan"): 0.10,
     (0.3, "lru"): 0.10,
+    (0.3, "opt"): 0.10,
     (0.3, "pbm"): 0.10,
+    (0.5, "cscan"): 0.15,
     (0.5, "lru"): 0.12,
+    (0.5, "opt"): 0.10,
     (0.5, "pbm"): 0.10,
 }
 TPCH_DEFAULTS = dict(scale=0.05, n_streams=4, buffer_frac=0.3,
@@ -120,7 +154,7 @@ def _compare_point(
         if pol not in runners:
             runners[pol] = make_runner(spec, bandwidth_ref=bandwidth,
                                        time_slice=time_slice,
-                                       static_policy=pol)
+                                       policies=(pol,))
         ar = run_workload_array(
             db, streams, pol, capacity_bytes=cap, bandwidth=bandwidth,
             time_slice=time_slice, spec=spec, runner=runners[pol],
@@ -160,7 +194,7 @@ def cross_validate(
     seed: int = 3,
     buffer_frac: float = 0.4,
     bandwidth: float = 700e6,
-    policies: Sequence[str] = ("lru", "pbm"),
+    policies: Sequence[str] = DEFAULT_POLICIES,
     time_slice: Optional[float] = None,
     _shared=None,
 ) -> List[Dict]:
@@ -207,7 +241,7 @@ def cross_validate_tpch(
     seed: int = 7,
     buffer_frac: float = 0.3,
     bandwidth: float = 600e6,
-    policies: Sequence[str] = ("lru", "pbm"),
+    policies: Sequence[str] = DEFAULT_POLICIES,
     time_slice: Optional[float] = None,
     _shared=None,
 ) -> List[Dict]:
@@ -215,7 +249,7 @@ def cross_validate_tpch(
     tables, 22 rotated query templates per stream, compiled through
     ``compiler.compile_workload``) run on both the event engine and the
     array backend via the same :func:`_compare_point` harness as the
-    micro suite; CScan/OPT stay event-engine-only."""
+    micro suite — all four paper policies."""
     if time_slice is None:
         time_slice = 0.1 * scale  # same scaling convention as the micro path
     if _shared is None:
@@ -250,6 +284,29 @@ def cross_validate_tpch_sweep(
         rows.extend(cross_validate_tpch(scale=scale, buffer_frac=f,
                                         _shared=shared, **kw))
     return rows
+
+
+def fit_bars_literal(rows: List[Dict]) -> str:
+    """Render measured errors as ready-to-paste ``ERROR_BARS`` /
+    ``TPCH_ERROR_BARS`` dict literals (the refit workflow's output:
+    recalibrating the envelope is a copy-paste into this file, not a
+    transcription).  Suggested bar = measured worst error + 25% headroom,
+    floored at the 10% default, rounded up to the percent."""
+    per_wl: Dict[str, Dict] = {}
+    for r in rows:
+        wl = r.get("workload", "micro")
+        worst = max(abs(r["stream_time_rel_err"]), abs(r["io_rel_err"]))
+        bar = max(0.10, math.ceil(worst * 1.25 * 100) / 100)
+        per_wl.setdefault(wl, {})[(r["buffer_frac"], r["policy"])] = bar
+    names = {"micro": "ERROR_BARS", "tpch": "TPCH_ERROR_BARS"}
+    out = ["# fitted bars (measured worst error x1.25, >= 10%) — paste "
+           "into validate.py:"]
+    for wl in sorted(per_wl):
+        out.append(f"{names.get(wl, wl.upper() + '_ERROR_BARS')} = {{")
+        for (frac, pol), bar in sorted(per_wl[wl].items(), key=str):
+            out.append(f"    ({frac}, {pol!r}): {bar:.2f},")
+        out.append("}")
+    return "\n".join(out)
 
 
 def _print_rows(rows: List[Dict], enforce: bool = True) -> int:
@@ -322,16 +379,7 @@ def main() -> None:
         ))
     failed = _print_rows(rows, enforce=not args.fit_bars)
     if args.fit_bars:
-        sug = {}
-        for r in rows:
-            key = (r.get("workload", "micro"), r["buffer_frac"], r["policy"])
-            worst = max(abs(r["stream_time_rel_err"]), abs(r["io_rel_err"]))
-            # suggested bar: measured worst error + 25% headroom, floored
-            # at the 10% default, rounded up to the percent
-            sug[key] = max(0.10, math.ceil(worst * 1.25 * 100) / 100)
-        print("suggested bars (measured worst error x1.25, >= 10%):")
-        for key, bar in sorted(sug.items(), key=str):
-            print(f"  {key}: {bar:.2f}")
+        print(fit_bars_literal(rows))
     if failed:
         print(f"{failed} point(s) outside the validated envelope",
               file=sys.stderr)

@@ -456,31 +456,21 @@ def run_workload(
     config: EngineConfig,
     policy_factory: Optional[Callable[[], Policy]] = None,
 ) -> EngineResult:
-    """Build an engine for ``policy_name`` ('lru'|'mru'|'pbm'|'opt'|'cscan'|
-    'pbm_lru'|'attach') and run the streams to completion."""
-    from .policies.lru import LRUPolicy, MRUPolicy
-    from .policies.pbm import PBMPolicy
-    from .policies.opt import OraclePolicy
-    from .policies.pbm_lru import PBMLRUPolicy
-    from .policies.attach_throttle import AttachThrottlePBM
+    """Build an engine for ``policy_name`` and run the streams to
+    completion.  Names resolve through ``repro.core.policy_registry`` —
+    the single policy table shared with the array backend; unknown names
+    fail there with the registered-name list.  ``policy_factory``
+    overrides the registry's construction (custom/parameterised
+    policies)."""
+    from . import policy_registry
 
-    cooperative = policy_name == "cscan"
     if policy_factory is not None:
+        cooperative = policy_registry.get(policy_name).cooperative \
+            if policy_name in policy_registry.names() else False
         policy: Optional[Policy] = policy_factory()
-    elif cooperative:
-        policy = None
-    elif policy_name in ("pbm", "pbm_lru", "attach"):
-        policy = {
-            "pbm": PBMPolicy,
-            "pbm_lru": PBMLRUPolicy,
-            "attach": AttachThrottlePBM,
-        }[policy_name](time_slice=config.pbm_time_slice)
     else:
-        policy = {
-            "lru": LRUPolicy,
-            "mru": MRUPolicy,
-            "opt": OraclePolicy,
-        }[policy_name]()
+        policy, cooperative = policy_registry.event_policy(
+            policy_name, config)
     eng = Engine(db, policy, config, cooperative=cooperative)
     for s in streams:
         eng.add_stream(s)

@@ -1,0 +1,317 @@
+"""One policy registry for both simulation backends.
+
+Every buffer-management policy in the tree — the paper's four-way
+comparison (LRU, CScans' ABM, PBM, OPT) and the beyond-paper variants —
+is described by exactly one :class:`PolicyEntry` here.  Both backends
+resolve names through this table:
+
+* the **event engine** (``repro.core.engine.run_workload``) instantiates
+  ``entry.event_factory(config)`` — or drives the cooperative ABM when
+  ``entry.cooperative`` is set;
+* the **array backend** (``repro.core.array_sim``) instantiates
+  ``entry.array_factory()``, an
+  :class:`~repro.core.array_sim.policies.ArrayPolicy`, and encodes the
+  policy in traced configs as the stable integer ``entry.array_id``.
+
+Policies are *data*: benchmarks derive their policy lists from
+:func:`names` instead of hardcoded tuples, unknown names fail with the
+known-name list, and adding a policy is one entry plus (optionally) an
+``ArrayPolicy`` implementation — no engine or step surgery (see the
+"adding a policy" section of EXPERIMENTS.md).
+
+Factories import lazily so this module — and with it ``repro.core`` —
+stays importable without JAX; only resolving an *array* policy touches
+``repro.core.array_sim``.
+"""
+
+from __future__ import annotations
+
+import argparse
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+__all__ = [
+    "PolicyEntry", "register", "get", "names", "event_policy",
+    "array_policy", "array_ids", "array_name",
+]
+
+
+@dataclass(frozen=True)
+class PolicyEntry:
+    """One policy, both backends.
+
+    ``event_factory(config) -> Policy`` builds the dict-engine policy
+    from an :class:`~repro.core.engine.EngineConfig` (``None`` for
+    array-only entries and for the cooperative mode, where the engine
+    builds the ABM itself).  ``array_factory() -> ArrayPolicy`` builds
+    the array-backend policy (``None`` for event-only entries).
+    ``array_id`` is the stable integer the array backend carries in
+    traced configs — part of the result-JSON contract, never reused.
+    """
+
+    name: str
+    summary: str
+    paper: bool = False          # one of the paper's four-way comparison
+    cooperative: bool = False    # event engine drives it through the ABM
+    event_factory: Optional[Callable[..., object]] = None
+    array_factory: Optional[Callable[[], object]] = None
+    array_id: Optional[int] = None
+
+    @property
+    def backends(self) -> tuple:
+        """Which backends can run this policy ("event", "array")."""
+        out = []
+        if self.event_factory is not None or self.cooperative:
+            out.append("event")
+        if self.array_factory is not None:
+            out.append("array")
+        return tuple(out)
+
+
+_REGISTRY: Dict[str, PolicyEntry] = {}
+
+
+def register(entry: PolicyEntry) -> PolicyEntry:
+    """Add a policy to the registry (name and array_id must be unused)."""
+    if entry.name in _REGISTRY:
+        raise ValueError(f"policy {entry.name!r} already registered")
+    if not entry.backends:
+        raise ValueError(
+            f"policy {entry.name!r} has neither an event nor an array "
+            "factory — register at least one backend"
+        )
+    if entry.array_id is not None:
+        taken = {e.array_id: e.name for e in _REGISTRY.values()
+                 if e.array_id is not None}
+        if entry.array_id in taken:
+            raise ValueError(
+                f"array_id {entry.array_id} of {entry.name!r} is already "
+                f"used by {taken[entry.array_id]!r} (ids are a stable "
+                "result-JSON contract; pick a fresh one)"
+            )
+    if (entry.array_factory is not None) != (entry.array_id is not None):
+        raise ValueError(
+            f"policy {entry.name!r}: array_factory and array_id must be "
+            "given together"
+        )
+    _REGISTRY[entry.name] = entry
+    return entry
+
+
+def get(name: str) -> PolicyEntry:
+    """Look up a policy by name; unknown names list what exists."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name!r}; registered policies: "
+            f"{sorted(_REGISTRY)} (see repro.core.policy_registry)"
+        ) from None
+
+
+def names(backend: Optional[str] = None, paper_only: bool = False,
+          ) -> List[str]:
+    """Registered policy names, in registration order.
+
+    ``backend="event"|"array"`` restricts to policies that backend can
+    run; ``paper_only`` restricts to the paper's four-way comparison.
+    """
+    out = []
+    for e in _REGISTRY.values():
+        if backend is not None and backend not in e.backends:
+            continue
+        if paper_only and not e.paper:
+            continue
+        out.append(e.name)
+    return out
+
+
+def event_policy(name: str, config):
+    """Resolve ``name`` for the event engine.
+
+    Returns ``(policy, cooperative)``: the instantiated ``Policy`` (or
+    ``None`` in cooperative mode, where the engine owns the ABM).
+    """
+    e = get(name)
+    if "event" not in e.backends:
+        raise KeyError(
+            f"policy {name!r} is array-only; event-backend policies: "
+            f"{names(backend='event')}"
+        )
+    if e.cooperative:
+        return None, True
+    return e.event_factory(config), False
+
+
+def array_policy(name: str):
+    """Resolve ``name`` to a fresh ``ArrayPolicy`` instance (imports the
+    array backend, and with it JAX, lazily)."""
+    e = get(name)
+    if e.array_factory is None:
+        raise KeyError(
+            f"policy {name!r} is event-engine-only; array-backend "
+            f"policies: {names(backend='array')}"
+        )
+    return e.array_factory()
+
+
+def array_ids() -> Dict[str, int]:
+    """name -> stable array id, for every array-capable policy."""
+    return {e.name: e.array_id for e in _REGISTRY.values()
+            if e.array_id is not None}
+
+
+def array_name(array_id: int) -> Optional[str]:
+    """Inverse of :func:`array_ids` (None for unknown ids)."""
+    for e in _REGISTRY.values():
+        if e.array_id == array_id:
+            return e.name
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Registrations.  array_id values are a stable contract (result JSONs and
+# stacked configs carry them): lru=0 and pbm=1 predate the registry.
+# ---------------------------------------------------------------------------
+
+def _event_lru(config):
+    from .policies.lru import LRUPolicy
+    return LRUPolicy()
+
+
+def _event_mru(config):
+    from .policies.lru import MRUPolicy
+    return MRUPolicy()
+
+
+def _event_pbm(config):
+    from .policies.pbm import PBMPolicy
+    return PBMPolicy(time_slice=config.pbm_time_slice)
+
+
+def _event_opt(config):
+    from .policies.opt import OraclePolicy
+    return OraclePolicy()
+
+
+def _event_pbm_lru(config):
+    from .policies.pbm_lru import PBMLRUPolicy
+    return PBMLRUPolicy(time_slice=config.pbm_time_slice)
+
+
+def _event_attach(config):
+    from .policies.attach_throttle import AttachThrottlePBM
+    return AttachThrottlePBM(time_slice=config.pbm_time_slice)
+
+
+def _array_lru():
+    from .array_sim.policies import ArrayLRU
+    return ArrayLRU()
+
+
+def _array_pbm():
+    from .array_sim.policies import ArrayPBM
+    return ArrayPBM()
+
+
+def _array_cscan():
+    from .array_sim.policies import ArrayCScan
+    return ArrayCScan()
+
+
+def _array_opt():
+    from .array_sim.policies import ArrayOPT
+    return ArrayOPT()
+
+
+register(PolicyEntry(
+    name="lru", summary="least-recently-used eviction (paper baseline)",
+    paper=True, event_factory=_event_lru,
+    array_factory=_array_lru, array_id=0,
+))
+register(PolicyEntry(
+    name="cscan",
+    summary="Cooperative Scans: ABM chunk scheduling (paper §2)",
+    paper=True, cooperative=True,
+    array_factory=_array_cscan, array_id=2,
+))
+register(PolicyEntry(
+    name="pbm",
+    summary="Predictive Buffer Manager: bucketed consumption timeline "
+            "(paper §3)",
+    paper=True, event_factory=_event_pbm,
+    array_factory=_array_pbm, array_id=1,
+))
+register(PolicyEntry(
+    name="opt",
+    summary="Belady bound on exact next-consumption distances (paper §4)",
+    paper=True, event_factory=_event_opt,
+    array_factory=_array_opt, array_id=3,
+))
+register(PolicyEntry(
+    name="mru", summary="most-recently-used eviction (beyond-paper)",
+    event_factory=_event_mru,
+))
+register(PolicyEntry(
+    name="pbm_lru",
+    summary="PBM with LRU inside buckets (paper §5, sketched)",
+    event_factory=_event_pbm_lru,
+))
+register(PolicyEntry(
+    name="attach",
+    summary="Attach&Throttle PBM (paper §5, sketched)",
+    event_factory=_event_attach,
+))
+
+
+def _check(verbose: bool = True) -> int:
+    """Registry completeness: every entry resolves on each backend it
+    declares (or is explicitly single-backend).  CI runs this."""
+    from .engine import EngineConfig
+
+    cfg = EngineConfig()
+    failures = 0
+    for name in names():
+        e = get(name)
+        marks = []
+        for backend in ("event", "array"):
+            if backend not in e.backends:
+                marks.append(f"{backend}-skip")
+                continue
+            try:
+                if backend == "event":
+                    pol, coop = event_policy(name, cfg)
+                    assert coop or pol is not None
+                else:
+                    assert array_policy(name) is not None
+                marks.append(f"{backend}-ok")
+            except Exception as exc:  # noqa: BLE001
+                marks.append(f"{backend}-FAIL({exc})")
+                failures += 1
+        if verbose:
+            tag = "paper" if e.paper else "extra"
+            only = ("" if len(e.backends) == 2
+                    else f" [{e.backends[0]}-only]")
+            print(f"  {name:8s} ({tag}){only}: {' '.join(marks)}")
+    return failures
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="verify every registered policy resolves on its "
+                         "declared backends (CI registry-completeness)")
+    args = ap.parse_args()
+    if args.check:
+        n = _check()
+        if n:
+            raise SystemExit(f"{n} registry entries failed to resolve")
+        print("policy registry OK:",
+              f"{len(names())} policies,",
+              f"event={names(backend='event')},",
+              f"array={names(backend='array')}")
+    else:
+        for nm in names():
+            e = get(nm)
+            print(f"{nm:8s} backends={'/'.join(e.backends)} "
+                  f"paper={e.paper} — {e.summary}")

@@ -24,7 +24,7 @@ from .flash_attention import flash_attention_kernel
 from .mamba2_scan import mamba2_scan_kernel
 from .mlstm import mlstm_chunked_kernel
 from .paged_attention import paged_attention_kernel
-from .pbm_timeline import pbm_timeline_step_kernel
+from .pbm_timeline import batched_evict_kernel
 
 _BACKEND = "auto"
 
@@ -86,25 +86,24 @@ def mamba2_scan(xh, a, b, c, chunk: int = 128):
     return y
 
 
-def pbm_timeline_step(bucket, b_target, last_used, sizes, evictable,
-                      time_passed, k, need_free, policy, now,
-                      *, nb: int, m: int, vmax: int = 64):
-    """Timeline shift + spill + batched evict selection (array PBM core).
+def batched_evict(key, sizes, evictable, need_free, *, vmax: int = 64):
+    """Batched evict selection over a policy score array (array-sim core).
 
+    The eviction policy is fully encoded in ``key`` — the
+    ``ArrayPolicy.score_victims`` output for this step — so this one op
+    serves LRU, PBM, CScan, OPT, and any future registered policy.
     Called from inside the already-jitted ``array_sim`` step, so no jit
     wrapper here; backend policy picks the Mosaic kernel on TPU and the
     jnp oracle elsewhere (the oracle is itself fully vectorised).
     """
     mode = _use_pallas()
     if mode is not False:
-        return pbm_timeline_step_kernel(
-            bucket, b_target, last_used, sizes, evictable,
-            time_passed, k, need_free, policy, now,
-            nb=nb, m=m, vmax=vmax, interpret=(mode is None),
+        return batched_evict_kernel(
+            key, sizes, evictable, need_free,
+            vmax=vmax, interpret=(mode is None),
         )
-    return ref.pbm_timeline_step_ref(
-        bucket, b_target, last_used, sizes, evictable,
-        time_passed, k, need_free, policy, now, nb=nb, m=m, vmax=vmax,
+    return ref.batched_evict_ref(
+        key, sizes, evictable, need_free, vmax=vmax,
     )
 
 

@@ -1,33 +1,39 @@
-"""Pallas kernel: PBM bucketed-timeline shift + spill + batched eviction.
+"""Pallas kernel: batched buffer-pool eviction for the array simulation.
 
 The hot inner operation of the array-native buffer-manager simulation
-(`repro.core.array_sim`): one call advances the paper's bucketed timeline
-by ``k`` slices (``RefreshRequestedBuckets``, Fig. 9/10) and selects the
-batch of eviction victims under the Belady rule (not-requested bucket
-first, then furthest-future buckets) for a byte budget.
+(`repro.core.array_sim`): one call selects the batch of eviction victims
+for a byte budget by popping a priority order.  The *policy* is entirely
+encoded in the ``key`` input — the score array an
+:class:`repro.core.array_sim.policies.ArrayPolicy` computed for this step
+(PBM's shifted bucketed timeline, LRU's age, OPT's exact next-use
+distance, CScan's keep-relevance) — so a single kernel serves every
+registered policy and a vmapped sweep can mix policies per lane by
+selecting between their score arrays.
+
+Historical note: this kernel used to fuse the PBM timeline shift and
+hardcode the LRU-vs-PBM key choice behind an integer policy id.  The
+shift (``RefreshRequestedBuckets``, paper Fig. 9/10) is elementwise and
+now lives with the PBM policy itself
+(``array_sim.policies.shift_timeline``); the key dispatch moved to the
+policy protocol.
 
 Design notes
 ------------
 * All per-page state is dense ``(1, P)`` rows in VMEM (P is padded to a
   multiple of 128 by ``SimSpec``); scalars ride in SMEM.
-* The shift is elementwise: bucket ``b`` (length ``2**(b//m)`` slices)
-  moves left when the slice counter divides its length; pages shifted
-  past position 0 spill and are re-bucketed at their freshly recomputed
-  ``b_target`` — the self-correction step of the paper.
 * Victim selection is a prefix-sum over the eviction priority order.
   Instead of sorting (awkward on the VPU), we compute for every page the
   bytes that would be freed *before* it via a masked (P, P) comparison
   matrix contracted against page sizes on the MXU — pages whose prefix
   stays below ``need_free`` are the victims.  O(P^2) but one MXU matmul.
 
-Semantics are defined by ``repro.kernels.ref.pbm_timeline_step_ref``;
+Semantics are defined by ``repro.kernels.ref.batched_evict_ref``;
 tests assert exact agreement in interpret mode.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,47 +43,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG = -1e30  # plain float: a jnp scalar would be a captured constant
 
 
-def _kernel(iscal_ref, fscal_ref, bucket_ref, b_target_ref, last_used_ref,
-            sizes_ref, evictable_ref, bucket_out_ref, evict_out_ref,
-            *, nb: int, m: int, vmax: int):
-    time_passed = iscal_ref[0, 0]
-    k = iscal_ref[0, 1]
-    policy = iscal_ref[0, 2]
+def _kernel(fscal_ref, key_ref, sizes_ref, evictable_ref, evict_out_ref,
+            *, vmax: int):
     need_free = fscal_ref[0, 0]
-    now = fscal_ref[0, 1]
 
-    bucket = bucket_ref[:]            # (1, P) i32
-    b_target = b_target_ref[:]
-    P = bucket.shape[-1]
-
-    # ---- timeline shift + spill (k slices) -------------------------------
-    def shift_once(i, b):
-        tp = time_passed + i + 1
-        blen = jnp.left_shift(jnp.int32(1), jnp.clip(b, 0, nb - 1) // m)
-        req = (b >= 0) & (b < nb)
-        moved = req & ((tp % blen) == 0)
-        b2 = jnp.where(moved, b - 1, b)
-        return jnp.where(b2 < 0, b_target, b2)
-
-    bucket2 = jax.lax.fori_loop(0, jnp.maximum(k, 0), shift_once, bucket)
-    bucket_out_ref[:] = bucket2
-
-    # ---- eviction key ----------------------------------------------------
     ev = evictable_ref[:]             # (1, P) f32 0/1
-    age = jnp.maximum(now - last_used_ref[:], 0.0)
-    # requested-bucket tie-break: per-(page, call) hash, not page index —
-    # a fixed index order would keep the same elite resident every call
-    # (see pbm_timeline_step_ref)
-    idxi = jax.lax.broadcasted_iota(jnp.uint32, (1, P), 1)
-    seed = jax.lax.bitcast_convert_type(now + 1.0, jnp.uint32)
-    h32 = idxi * jnp.uint32(2654435761) + seed * jnp.uint32(40503)
-    tie = (h32 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
-    tb = jnp.where(bucket2 == nb, age / (age + 1.0), tie)
-    key_pbm = bucket2.astype(jnp.float32) + 0.5 * tb
-    key = jnp.where(policy == 1, key_pbm, age)
-    key = jnp.where(ev > 0, key, NEG)
+    key = jnp.where(ev > 0, key_ref[:], NEG)
+    P = key.shape[-1]
 
-    # ---- batched Belady-rule pop via prefix bytes on the MXU -------------
+    # ---- batched priority pop via prefix bytes on the MXU ----------------
     key_p = key.reshape(P, 1)         # priority of the row page p
     key_q = key                       # (1, P): candidate predecessors q
     iq = jax.lax.broadcasted_iota(jnp.int32, (P, P), 1)
@@ -99,51 +73,31 @@ def _kernel(iscal_ref, fscal_ref, bucket_ref, b_target_ref, last_used_ref,
     evict_out_ref[:] = take.astype(jnp.float32)
 
 
-def pbm_timeline_step_kernel(
-    bucket: jax.Array,      # (P,) i32
-    b_target: jax.Array,    # (P,) i32
-    last_used: jax.Array,   # (P,) f32
-    sizes: jax.Array,       # (P,) f32
-    evictable: jax.Array,   # (P,) bool
-    time_passed: jax.Array,  # () i32
-    k: jax.Array,            # () i32
+def batched_evict_kernel(
+    key: jax.Array,          # (P,) f32 policy score (higher = evict first)
+    sizes: jax.Array,        # (P,) f32
+    evictable: jax.Array,    # (P,) bool
     need_free: jax.Array,    # () f32
-    policy: jax.Array,       # () i32
-    now: jax.Array,          # () f32
     *,
-    nb: int,
-    m: int,
     vmax: int = 64,
     interpret: bool = False,
-) -> Tuple[jax.Array, jax.Array]:
-    """Fused timeline shift + batched evict selection.  Returns
-    ``(new_bucket (P,) i32, evict_mask (P,) bool)``."""
-    P = bucket.shape[0]
-    iscal = jnp.stack(
-        [jnp.asarray(time_passed, jnp.int32), jnp.asarray(k, jnp.int32),
-         jnp.asarray(policy, jnp.int32)]
-    ).reshape(1, 3)
-    fscal = jnp.stack(
-        [jnp.asarray(need_free, jnp.float32), jnp.asarray(now, jnp.float32)]
-    ).reshape(1, 2)
+) -> jax.Array:
+    """Batched evict selection over a policy score array.  Returns the
+    ``(P,) bool`` evict mask."""
+    P = key.shape[0]
+    fscal = jnp.asarray(need_free, jnp.float32).reshape(1, 1)
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
     vmem = pl.BlockSpec(memory_space=pltpu.VMEM)
-    new_bucket, evict = pl.pallas_call(
-        functools.partial(_kernel, nb=nb, m=m, vmax=min(vmax, P)),
-        out_shape=(
-            jax.ShapeDtypeStruct((1, P), jnp.int32),
-            jax.ShapeDtypeStruct((1, P), jnp.float32),
-        ),
-        in_specs=[smem, smem, vmem, vmem, vmem, vmem, vmem],
-        out_specs=(vmem, vmem),
+    evict = pl.pallas_call(
+        functools.partial(_kernel, vmax=min(vmax, P)),
+        out_shape=jax.ShapeDtypeStruct((1, P), jnp.float32),
+        in_specs=[smem, vmem, vmem, vmem],
+        out_specs=vmem,
         interpret=interpret,
     )(
-        iscal,
         fscal,
-        bucket.reshape(1, P).astype(jnp.int32),
-        b_target.reshape(1, P).astype(jnp.int32),
-        last_used.reshape(1, P).astype(jnp.float32),
+        key.reshape(1, P).astype(jnp.float32),
         sizes.reshape(1, P).astype(jnp.float32),
         evictable.reshape(1, P).astype(jnp.float32),
     )
-    return new_bucket.reshape(P), evict.reshape(P) > 0
+    return evict.reshape(P) > 0

@@ -98,71 +98,33 @@ def mamba2_scan_ref(
     return jnp.moveaxis(ys, 0, 1).astype(xh.dtype), h_f
 
 
-def pbm_timeline_step_ref(
-    bucket: jax.Array,      # (P,) i32 current bucket (nb == not-requested)
-    b_target: jax.Array,    # (P,) i32 recomputed bucket if (re)pushed now
-    last_used: jax.Array,   # (P,) f32 last consumption time (LRU clock)
+def batched_evict_ref(
+    key: jax.Array,         # (P,) f32 eviction priority (higher = evict first)
     sizes: jax.Array,       # (P,) f32 page bytes
     evictable: jax.Array,   # (P,) bool resident & unpinned & valid
-    time_passed: jax.Array, # () i32 timeline slices elapsed so far
-    k: jax.Array,           # () i32 slices to shift this call
     need_free: jax.Array,   # () f32 bytes that must be freed
-    policy: jax.Array,      # () i32 0 = LRU, 1 = PBM
-    now: jax.Array,         # () f32 sim time (for LRU age)
     *,
-    nb: int,
-    m: int,
     vmax: int = 64,
-) -> Tuple[jax.Array, jax.Array]:
-    """Oracle for the PBM timeline kernel: shift + spill + batched evict.
+) -> jax.Array:
+    """Oracle for the batched eviction kernel: pop the priority order.
 
-    Semantics mirror ``PBMPolicy.refresh_requested_buckets`` +
-    ``choose_victims``: per elapsed slice, bucket ``b`` moves left when the
-    slice count divides its length ``2**(b//m)``; a page shifted past
-    position 0 is *spilled* and re-bucketed at ``b_target`` (its freshly
-    recomputed priority).  Eviction then pops the not-requested bucket
-    first (LRU order), then the furthest-future buckets, until
-    ``need_free`` bytes are covered — Belady's rule under estimation —
+    The eviction *policy* lives entirely in ``key`` — an
+    ``ArrayPolicy.score_victims`` array (PBM's shifted-timeline composite,
+    LRU's age, OPT's exact next-use distance, CScan's keep-relevance…) —
+    so one op serves every registered policy.  Victims are taken in
+    descending key order until ``need_free`` bytes are covered,
     considering at most the ``vmax`` highest-priority candidates per call
-    (a full argsort per step would dominate the simulation).
-    Returns ``(new_bucket, evict_mask)``.
+    (a full argsort per step would dominate the simulation).  Key ties
+    resolve by ascending page index.  Returns the evict mask.
     """
-    P = bucket.shape[0]
-
-    def shift_once(i, b):
-        tp = time_passed + i + 1
-        blen = jnp.left_shift(jnp.int32(1), jnp.clip(b, 0, nb - 1) // m)
-        req = (b >= 0) & (b < nb)
-        moved = req & ((tp % blen) == 0)
-        b2 = jnp.where(moved, b - 1, b)
-        return jnp.where(b2 < 0, b_target, b2)
-
-    bucket2 = jax.lax.fori_loop(0, jnp.maximum(k, 0), shift_once, bucket)
-
-    age = jnp.maximum(now - last_used, 0.0)
-    # composite PBM key: bucket level dominates; not-requested (== nb) is
-    # the top level with LRU order inside; requested buckets break ties by
-    # a per-(page, call) hash (the dict impl's insertion order is equally
-    # arbitrary, but a FIXED index order would carve a stable always-kept
-    # elite out of every bucket — systematic retention the dict engine's
-    # churning insertion order never develops).
-    idxi = jnp.arange(P, dtype=jnp.uint32)
-    seed = jax.lax.bitcast_convert_type(
-        jnp.float32(now) + 1.0, jnp.uint32
-    ).astype(jnp.uint32)
-    h32 = idxi * jnp.uint32(2654435761) + seed * jnp.uint32(40503)
-    tie = (h32 >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
-    tb = jnp.where(bucket2 == nb, age / (age + 1.0), tie)
-    key_pbm = bucket2.astype(jnp.float32) + 0.5 * tb
-    key = jnp.where(policy == 1, key_pbm, age)
+    P = key.shape[0]
     key = jnp.where(evictable, key, -jnp.inf)
     _, cand = jax.lax.top_k(key, min(vmax, P))  # ties -> ascending index
     c_ok = evictable[cand]
     sz_c = jnp.where(c_ok, sizes[cand], 0.0)
     csum = jnp.cumsum(sz_c)
     take = c_ok & (csum - sz_c < need_free) & (need_free > 0)
-    evict = jnp.zeros((P,), bool).at[cand].set(take)
-    return bucket2, evict
+    return jnp.zeros((P,), bool).at[cand].set(take)
 
 
 def gla_ref(

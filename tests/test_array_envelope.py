@@ -31,7 +31,8 @@ def test_small_pool_parity_lru_and_pbm():
     at the 10% and 20% buffer points (quick-pass scale) — the operating
     range where PBM's Belady approximation beats LRU hardest and where
     the pre-PR-2 array model could not run at all."""
-    rows = cross_validate_sweep(fracs=(0.1, 0.2), scale=0.25)
+    rows = cross_validate_sweep(fracs=(0.1, 0.2), scale=0.25,
+                                policies=("lru", "pbm"))
     assert len(rows) == 4
     for r in rows:
         bar = ERROR_BARS[(r["buffer_frac"], r["policy"])]

@@ -18,9 +18,26 @@ from hypothesis import given, settings, strategies as st
 import jax.numpy as jnp
 
 from repro.core import BufferPool, Database, PBMPolicy, ScanSpec, ScanState
-from repro.core.array_sim.policies import next_consumption, target_buckets
+from repro.core.array_sim.policies import (
+    ArrayPBM, StepCtx, next_consumption, target_buckets,
+)
 from repro.core.array_sim.spec import build_spec
-from repro.kernels.ref import pbm_timeline_step_ref
+from repro.kernels.ref import batched_evict_ref
+
+
+def _pbm_key(spec, bucket, last_used, now):
+    """PBM's composite eviction key via the ArrayPolicy surface (only the
+    fields ``score_victims`` reads are populated)."""
+    ctx = StepCtx(
+        spec=spec, refresh=False, time_slice=jnp.float32(1.0),
+        now=jnp.float32(now), steps=None, time_passed=None, dt=None,
+        page_first=None, page_last=None, page_col=None, page_valid=None,
+        resident=None, last_used=last_used, load_mask=None, load_cand=None,
+        load_ok=None, cross_pidx=None, crossed=None, active=None,
+        cols=None, cur=None, end=None, start=None, eps=None, rate=None,
+        speed_push=None,
+    )
+    return ArrayPBM().score_victims(bucket, ctx)
 
 N_TUPLES = 102_400            # 25 pages of exactly 4096 bytes per column
 PAGE_BYTES = 1 << 12
@@ -136,12 +153,11 @@ def test_eviction_order_matches_dict_pbm(scans, n_evict):
     bucket_in = np.full(P, nb, np.int32)
     for gid, page in enumerate(pages):
         bucket_in[gid] = levels[page.pid]
-    _, evict = pbm_timeline_step_ref(
-        jnp.asarray(bucket_in), jnp.asarray(bucket_in),
-        jnp.full(P, -1e9, jnp.float32), jnp.asarray(spec.page_size),
-        jnp.asarray(spec.page_valid), jnp.int32(0), jnp.int32(0),
-        jnp.float32(need), jnp.int32(1), jnp.float32(0.0),
-        nb=nb, m=spec.buckets_per_group, vmax=P,
+    key = _pbm_key(spec, jnp.asarray(bucket_in),
+                   jnp.full(P, -1e9, jnp.float32), 0.0)
+    evict = batched_evict_ref(
+        key, jnp.asarray(spec.page_size), jnp.asarray(spec.page_valid),
+        jnp.float32(need), vmax=P,
     )
     evict = np.asarray(evict)
     victims_arr = {pages[g].pid for g in np.flatnonzero(evict[:len(pages)])}

@@ -1,0 +1,148 @@
+"""The policy registry: one policy surface for both engines.
+
+Completeness (every registered name resolves on each backend it
+declares — the CI registry check), the stable array-id contract,
+helpful unknown-name errors, registry-derived benchmark policy lists,
+and the deprecation shims for the pre-registry kwargs.
+"""
+
+import warnings
+
+import pytest
+
+from repro.core import EngineConfig, policy_registry
+from repro.core.policies.base import Policy
+
+
+def test_registry_completeness_every_name_resolves():
+    """Every registered policy resolves on BOTH backends, or is
+    explicitly single-backend (its entry declares so) — nothing may be
+    silently broken on either engine."""
+    cfg = EngineConfig()
+    for name in policy_registry.names():
+        entry = policy_registry.get(name)
+        assert entry.backends, name
+        if "event" in entry.backends:
+            pol, coop = policy_registry.event_policy(name, cfg)
+            assert coop == entry.cooperative
+            if not coop:
+                assert isinstance(pol, Policy), name
+        if "array" in entry.backends:
+            ap = policy_registry.array_policy(name)
+            assert ap.name == name
+            assert entry.array_id is not None
+        else:
+            # explicitly event-only: the array resolver must say so
+            with pytest.raises(KeyError, match="event-engine-only"):
+                policy_registry.array_policy(name)
+    assert policy_registry._check(verbose=False) == 0
+
+
+def test_paper_comparison_runs_on_both_backends():
+    """The paper's four-way comparison is fully array-capable — the
+    tentpole contract: no policy of Figs 9-16 is event-engine-only."""
+    paper = policy_registry.names(paper_only=True)
+    assert paper == ["lru", "cscan", "pbm", "opt"]
+    for name in paper:
+        assert set(policy_registry.get(name).backends) == {"event", "array"}
+
+
+def test_array_ids_are_the_stable_contract():
+    """lru=0 / pbm=1 predate the registry (result JSONs carry them);
+    cscan/opt extend the space without renumbering."""
+    ids = policy_registry.array_ids()
+    assert ids["lru"] == 0 and ids["pbm"] == 1
+    assert ids["cscan"] == 2 and ids["opt"] == 3
+    for name, pid in ids.items():
+        assert policy_registry.array_name(pid) == name
+    assert policy_registry.array_name(999) is None
+
+
+def test_unknown_names_list_registered_policies():
+    with pytest.raises(KeyError, match="registered policies"):
+        policy_registry.get("belady2000")
+    with pytest.raises(KeyError, match="registered policies"):
+        policy_registry.event_policy("nope", EngineConfig())
+    # event-only names get a targeted error from the array side
+    with pytest.raises(KeyError, match="event-engine-only"):
+        policy_registry.array_policy("mru")
+    # ... and from the array config constructor
+    from repro.core.array_sim import make_config
+    from repro.core.pages import Database
+    from repro.core.scans import ScanSpec
+    from repro.core.array_sim import build_spec
+    db = Database()
+    db.add_table("t", 10_000, {"c": 2.0}, page_bytes=1 << 14)
+    spec = build_spec(db, [[ScanSpec("t", ("c",), ((0, 10_000),))]])
+    with pytest.raises(KeyError, match="event-engine-only"):
+        make_config(spec, 1 << 20, policy="mru")
+
+
+def test_benchmark_policy_lists_derive_from_registry():
+    from benchmarks import microbench, tpch
+
+    assert microbench.POLICIES == policy_registry.names(
+        backend="event", paper_only=True)
+    assert tpch.POLICIES == microbench.POLICIES
+    assert microbench.ARRAY_POLICIES == policy_registry.names(
+        backend="array")
+    assert tpch.ARRAY_POLICIES == microbench.ARRAY_POLICIES
+    assert set(microbench.EXTENDED) == {"mru", "pbm_lru", "attach"}
+
+
+def test_config_outside_compiled_policy_set_truncates_not_mislabels():
+    """A config whose policy id is not in the runner's compiled set must
+    NOT silently run as some other policy (a mislabeled lane in a stacked
+    sweep would be wrong science): the lane trips the livelock guard on
+    its first step and reports ``truncated`` with zero I/O."""
+    jax = pytest.importorskip("jax")
+    from repro.core.pages import Database
+    from repro.core.scans import ScanSpec
+    from repro.core.array_sim import (
+        build_spec, make_config, make_runner, result_from_state,
+    )
+
+    db = Database()
+    db.add_table("t", 50_000, {"c": 2.0}, page_bytes=1 << 14)
+    spec = build_spec(db, [[ScanSpec("t", ("c",), ((0, 50_000),))]])
+    runner = make_runner(spec, time_slice=0.01, policies=("lru", "pbm"))
+    bad = jax.block_until_ready(runner(make_config(spec, 1 << 20, policy="opt")))
+    r = result_from_state(bad, "opt")
+    assert r.extras["truncated"] and r.total_io_bytes == 0.0
+    good = jax.block_until_ready(runner(make_config(spec, 1 << 20, policy="lru")))
+    assert not result_from_state(good, "lru").extras["truncated"]
+
+
+def test_deprecation_shims_route_through_registry():
+    """The pre-registry kwargs keep working: ``static_policy=`` on
+    make_runner and integer policy ids on make_config warn (once) and
+    resolve to the same registry policies."""
+    jax = pytest.importorskip("jax")  # noqa: F841
+    from repro.core.pages import Database
+    from repro.core.scans import ScanSpec
+    from repro.core.array_sim import (
+        build_spec, make_config, make_runner,
+    )
+
+    from repro.core.array_sim import sim as sim_mod
+
+    db = Database()
+    db.add_table("t", 50_000, {"c": 2.0}, page_bytes=1 << 14)
+    spec = build_spec(db, [[ScanSpec("t", ("c",), ((0, 50_000),))]])
+    sim_mod._warned.clear()   # warn-once state may be spent by earlier tests
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        runner = make_runner(spec, time_slice=0.01, static_policy="pbm")
+        cfg_int = make_config(spec, 1 << 20, policy=1)
+    msgs = " ".join(str(x.message) for x in w)
+    assert "static_policy" in msgs and "deprecated" in msgs
+    assert int(cfg_int.policy) == policy_registry.array_ids()["pbm"]
+    # ... and only once: the second use stays quiet
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        make_runner(spec, time_slice=0.01, static_policy="pbm")
+    assert not [x for x in w2 if "static_policy" in str(x.message)]
+    cfg = make_config(spec, 1 << 20, policy="pbm")
+    assert int(cfg.policy) == int(cfg_int.policy)
+    state = jax.block_until_ready(runner(cfg))
+    assert float(state.io_bytes) > 0
