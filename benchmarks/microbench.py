@@ -107,14 +107,17 @@ def sweep(which: str, policies: List[str], scale: float = 1.0, seed: int = 3):
     return out
 
 
-def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 3):
+def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 3,
+                stepper: str = "horizon"):
     """Array-backend (``repro.core.array_sim``) version of :func:`sweep`.
 
     Emits rows with the same schema (policy / avg_stream_time_s / io_gb /
     wall_s / sweep / point) for every registered array policy — the
     paper's full four-way comparison.  One jitted runner per
     (streams-config, policy) is reused across sweep points: the capacity
-    and bandwidth of each point are traced config scalars.
+    and bandwidth of each point are traced config scalars.  ``stepper``
+    picks the time engine (``repro.core.array_sim.make_runner``) — the
+    event-horizon stepper is the default benchmark lane.
     """
     from repro.core.array_sim import build_spec, make_runner, run_workload_array
 
@@ -151,7 +154,8 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 3):
             spec = build_spec(db, streams)
             runners = {
                 pol: make_runner(spec, bandwidth_ref=700e6,
-                                 time_slice=time_slice, policies=(pol,))
+                                 time_slice=time_slice, policies=(pol,),
+                                 stepper=stepper)
                 for pol in policies
             }
             spec_cache[skey] = (streams, spec, runners)
@@ -172,6 +176,9 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 3):
                 "sweep": which,
                 "point": p,
                 "backend": "array",
+                "stepper": stepper,
+                "macro_steps": r.extras.get("macro_steps", r.steps),
+                "skipped_time": r.extras.get("skipped_time", 0.0),
                 "truncated": r.extras.get("truncated", False),
             })
         out.extend(rows)

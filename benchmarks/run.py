@@ -51,11 +51,27 @@ def main() -> None:
     ap.add_argument("--backend", choices=["event", "array"], default="event",
                     help="microbenchmark backend: dict/heapq event engine "
                          "or the vmap-able array substrate")
+    ap.add_argument("--stepper", choices=["fixed", "horizon"],
+                    default="horizon",
+                    help="array time engine for the sweep rows (the races "
+                         "measure both; horizon is the default lane)")
+    ap.add_argument("--mesh", choices=["auto", "off"], default="auto",
+                    help="lane-sharded execution for array sweeps/races: "
+                         "expose up to 8 XLA host devices and shard_map "
+                         "batched lanes across them (auto), or keep the "
+                         "pre-PR-5 one-device batch (off)")
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args()
     os.makedirs(RESULTS_DIR, exist_ok=True)
     scale = 1.0 if args.full else 0.25
     sweeps = ("buffer",) if args.smoke else ("buffer", "bandwidth", "streams")
+    if args.backend == "array" and args.mesh == "auto":
+        # lane-sharded execution: expose up to 8 XLA host devices BEFORE
+        # jax initialises, so batched sweeps/races can spread lanes
+        # across them via shard_map (more devices than cores on small
+        # boxes — short lanes free their cores to the long ones)
+        from benchmarks.tpch import setup_lane_devices
+        setup_lane_devices()
 
     from benchmarks import microbench, tpch, sharing, serving_bench, data_bench
 
@@ -67,7 +83,8 @@ def main() -> None:
               "repro.core.array_sim", file=sys.stderr)
         for s in sweeps:
             rows.extend(microbench.sweep_array(
-                s, microbench.ARRAY_POLICIES, scale=scale))
+                s, microbench.ARRAY_POLICIES, scale=scale,
+                stepper=args.stepper))
     else:
         for s in sweeps:
             rows.extend(microbench.sweep(s, microbench.POLICIES, scale=scale))
@@ -105,7 +122,8 @@ def main() -> None:
             # the four-policy 24-lane vmapped sweep stays in the CI budget
             rows.extend(tpch.sweep_array(
                 s, tpch.ARRAY_POLICIES, scale=tpch_scale,
-                step_pages=2.0 if args.smoke else 1.0))
+                step_pages=2.0 if args.smoke else 1.0,
+                stepper=args.stepper, mesh=args.mesh == "auto"))
         tpch_name = "tpch_array.json"
     else:
         for s in sweeps:

@@ -8,9 +8,12 @@ operating point: 600 MB/s I/O, buffer = 30% of accessed volume.
 ``repro.core.array_sim.compiler`` and runs the FULL paper policy set
 (lru / cscan / pbm / opt) on the vmap-able array substrate: every
 (policy x sweep-point) lane of a sweep executes as ONE batched
-computation.  ``--smoke`` restricts to the buffer sweep at a quick scale
-— the CI configuration (same flag semantics as
-``benchmarks/microbench.py``).
+computation — by default on the event-horizon stepper
+(``--stepper fixed`` for the classic cadence) and lane-sharded across
+every visible device (``--mesh off`` to stay on one; array runs expose
+one XLA host device per CPU core up to 8).  ``--smoke`` restricts to
+the buffer sweep at a quick scale — the CI configuration (same flag
+semantics as ``benchmarks/microbench.py``).
 
 Policy lists come from ``repro.core.policy_registry`` — one source of
 truth for both backends; unknown names fail there with the known-name
@@ -21,8 +24,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core import EngineConfig, run_workload, simulate_belady
 from repro.core.policy_registry import names as policy_names
@@ -124,21 +128,45 @@ def sweep(which: str, policies: List[str], scale: float = 1.0, seed: int = 7):
     return out
 
 
+def lane_mesh(n_lanes: int):
+    """One-axis device mesh for lane-sharded execution, or ``None`` when
+    only one device is visible.  Uses the largest device count that
+    divides the lane count evenly (``shard_map`` needs equal shards);
+    the host device count comes from ``XLA_FLAGS
+    --xla_force_host_platform_device_count`` (set by :func:`main` for
+    array runs before JAX initialises)."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    n = len(devs)
+    while n > 1 and n_lanes % n != 0:
+        n -= 1
+    if n <= 1:
+        return None
+    return Mesh(np.array(devs[:n]), ("lanes",))
+
+
 def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7,
-                step_pages: float = 1.0):
+                step_pages: float = 1.0, stepper: str = "horizon",
+                mesh: bool = True):
     """Array-backend TPC-H sweep: same row schema as :func:`sweep` for
     every registered array policy (the paper's full four-way comparison).
 
     For the buffer and bandwidth axes the workload shape is constant, so
     the compiled spec is lowered once and EVERY (policy x point) lane runs
-    in one ``jax.vmap`` call — the runner is compiled over the whole
-    policy set and treats policy, capacity and bandwidth as traced config
-    scalars.  The streams axis changes the spec shape per point and falls
-    back to per-point batched-policy runs.  ``step_pages=2.0`` is the
-    coarse fast mode the batched races use (~2x fewer steps for a few %
-    fidelity) — the CI smoke runs the 24-lane sweep with it to stay
-    inside the job budget; validation always runs full fidelity
-    (``validate.py``).
+    in one batched call — the runner is compiled over the whole policy
+    set and treats policy, capacity and bandwidth as traced config
+    scalars; with ``mesh`` (default) the lanes additionally spread across
+    every visible device via ``shard_map``.  The streams axis changes the
+    spec shape per point and falls back to per-point batched-policy runs.
+    ``step_pages=2.0`` is the coarse fast mode the batched races use
+    (~2x fewer steps for a few % fidelity) — the CI smoke runs the
+    24-lane sweep with it to stay inside the job budget; validation
+    always runs full fidelity (``validate.py``).  ``stepper`` picks the
+    time engine — the event-horizon stepper is the default benchmark
+    lane (validated against the same bars as the fixed cadence).
     """
     import jax
 
@@ -153,7 +181,7 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7,
     points = SWEEP_POINTS[which]
     out: List[Dict] = []
 
-    def rows_from(states, lanes, batch_wall):
+    def rows_from(states, lanes, batch_wall, dt_ref):
         # wall_s is the batch wall amortised per lane — the lanes run
         # LOCKSTEP inside one vmapped call, so no per-lane wall exists
         # (unlike the sequential micro array rows); batch_wall_s/
@@ -161,7 +189,8 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7,
         rows = []
         for i, (p, pol) in enumerate(lanes):
             r = result_from_state(
-                jax.tree.map(lambda x, i=i: x[i], states), pol)
+                jax.tree.map(lambda x, i=i: x[i], states), pol,
+                dt_ref=dt_ref)
             rows.append({
                 "policy": pol,
                 "avg_stream_time_s": round(r.avg_stream_time, 3),
@@ -172,17 +201,28 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7,
                 "sweep": f"tpch_{which}",
                 "point": p,
                 "backend": "array",
+                "stepper": stepper,
+                "macro_steps": r.extras.get("macro_steps", r.steps),
+                "skipped_time": r.extras.get("skipped_time", 0.0),
                 "truncated": r.extras.get("truncated", False),
             })
         return rows
+
+    def run_lanes(spec, cfgs):
+        m = lane_mesh(len(cfgs)) if mesh else None
+        runner = make_runner(spec, bandwidth_ref=DEFAULTS["bandwidth"],
+                             time_slice=time_slice, policies=policies,
+                             step_pages=step_pages, stepper=stepper,
+                             mesh=m)
+        batched = runner if m is not None else jax.jit(jax.vmap(runner))
+        t0 = time.time()
+        states = jax.block_until_ready(batched(stack_configs(cfgs)))
+        return states, time.time() - t0, runner.dt_ref
 
     if which in ("buffer", "bandwidth"):
         streams = tpch_streams(db, n_streams=DEFAULTS["n_streams"], seed=seed)
         ws = tpch_accessed_bytes(db, streams)
         spec = compile_workload(db, streams)
-        runner = make_runner(spec, bandwidth_ref=DEFAULTS["bandwidth"],
-                             time_slice=time_slice, policies=policies,
-                             step_pages=step_pages)
         lanes, cfgs = [], []
         for p in points:
             frac = p if which == "buffer" else DEFAULTS["buffer_frac"]
@@ -191,29 +231,20 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7,
             for pol in policies:
                 lanes.append((p, pol))
                 cfgs.append(make_config(spec, cap, bw, pol))
-        t0 = time.time()
-        states = jax.block_until_ready(
-            jax.jit(jax.vmap(runner))(stack_configs(cfgs)))
-        wall = time.time() - t0
-        out = rows_from(states, lanes, wall)
+        states, wall, dt_ref = run_lanes(spec, cfgs)
+        out = rows_from(states, lanes, wall, dt_ref)
     else:
         for p in points:
             n_s = int(p)
             streams = tpch_streams(db, n_streams=n_s, seed=seed)
             ws = tpch_accessed_bytes(db, streams)
             spec = compile_workload(db, streams)
-            runner = make_runner(spec, bandwidth_ref=DEFAULTS["bandwidth"],
-                                 time_slice=time_slice, policies=policies,
-                                 step_pages=step_pages)
             cap = max(1 << 22, int(DEFAULTS["buffer_frac"] * ws))
             lanes = [(p, pol) for pol in policies]
             cfgs = [make_config(spec, cap, DEFAULTS["bandwidth"], pol)
                     for pol in policies]
-            t0 = time.time()
-            states = jax.block_until_ready(
-                jax.jit(jax.vmap(runner))(stack_configs(cfgs)))
-            wall = time.time() - t0
-            out.extend(rows_from(states, lanes, wall))
+            states, wall, dt_ref = run_lanes(spec, cfgs)
+            out.extend(rows_from(states, lanes, wall, dt_ref))
 
     truncated = [(r["point"], r["policy"]) for r in out if r["truncated"]]
     if truncated:
@@ -232,10 +263,18 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7,
 
 def batched_tpch_race(scale: float = 1.0, seed: int = 7, fracs=None,
                       policy: str = "pbm"):
-    """One vmapped array run over a TPC-H policy x buffer sweep vs the same
-    points run sequentially on the event engine — the multi-table analogue
-    of ``microbench.batched_buffer_race``, tracked as a CI trend metric.
-    Returns the summary dict that lands in ``tpch_race.json``."""
+    """The batched TPC-H policy x buffer sweep vs the same points run
+    sequentially on the event engine — the multi-table analogue of
+    ``microbench.batched_buffer_race``, tracked as a CI trend metric.
+
+    Races BOTH time engines: the ``fixed`` row is the PR-4 configuration
+    (fixed-dt, one vmapped call on one device — the historical baseline
+    the per-stepper ``speedup_ratio`` is measured against), the
+    ``horizon`` row is the new default batched lane (event-horizon
+    macro-stepping, lane-sharded across every visible device).  Returns
+    the summary dict that lands in ``tpch_race.json``; the legacy
+    top-level keys mirror the default (horizon) lane.
+    """
     import jax
 
     from repro.core.array_sim import (
@@ -259,52 +298,112 @@ def batched_tpch_race(scale: float = 1.0, seed: int = 7, fracs=None,
         ev_rows.append(run_workload(db, streams, policy, cfg))
     event_wall = time.time() - t0
 
-    runner = make_runner(spec, bandwidth_ref=DEFAULTS["bandwidth"],
-                         time_slice=time_slice, policies=(policy,),
-                         step_pages=2.0)
-    vrun = jax.jit(jax.vmap(runner))
     cfgs = stack_configs([
         make_config(spec, cap, DEFAULTS["bandwidth"], policy) for cap in caps
     ])
-    t0 = time.time()
-    states = jax.block_until_ready(vrun(cfgs))
-    array_cold = time.time() - t0
-    t0 = time.time()
-    states = jax.block_until_ready(vrun(cfgs))
-    array_wall = time.time() - t0
+    steppers: Dict[str, Dict] = {}
+    for stepper in ("fixed", "horizon"):
+        mesh = lane_mesh(len(fracs)) if stepper == "horizon" else None
+        runner = make_runner(spec, bandwidth_ref=DEFAULTS["bandwidth"],
+                             time_slice=time_slice, policies=(policy,),
+                             step_pages=2.0, stepper=stepper, mesh=mesh)
+        vrun = runner if mesh is not None else jax.jit(jax.vmap(runner))
+        t0 = time.time()
+        states = jax.block_until_ready(vrun(cfgs))
+        cold = time.time() - t0
+        t0 = time.time()
+        states = jax.block_until_ready(vrun(cfgs))
+        wall = time.time() - t0
+        results = [
+            result_from_state(jax.tree.map(lambda x, i=i: x[i], states),
+                              policy, dt_ref=runner.dt_ref)
+            for i in range(len(fracs))
+        ]
+        truncated = [f for f, r in zip(fracs, results)
+                     if r.extras.get("truncated")]
+        if truncated:
+            print(f"  tpch batched sweep WARNING: truncated lanes "
+                  f"(livelock guard) at buffer fracs {truncated} "
+                  f"[{stepper}] — race is invalid", flush=True)
+        steppers[stepper] = {
+            "wall_s": round(wall, 3),
+            "cold_wall_s": round(cold, 3),
+            "mesh_devices": 1 if mesh is None else mesh.size,
+            "speedup_vs_event": round(event_wall / max(wall, 1e-9), 3),
+            "avg_stream_time_s": [round(r.avg_stream_time, 3)
+                                  for r in results],
+            "macro_steps": [r.extras.get("macro_steps", r.steps)
+                            for r in results],
+            "skipped_time_s": [r.extras.get("skipped_time", 0.0)
+                               for r in results],
+            "truncated_fracs": truncated,
+        }
+        print(
+            f"  tpch batched sweep [{policy}, {len(fracs)} buffer points, "
+            f"{stepper}, {steppers[stepper]['mesh_devices']} device(s)]: "
+            f"array = {wall:.2f}s (cold {cold:.2f}s incl. compile) vs "
+            f"sequential event engine = {event_wall:.2f}s -> "
+            f"{'array WINS' if wall < event_wall else 'event wins'} "
+            f"({event_wall / max(wall, 1e-9):.2f}x)",
+            flush=True,
+        )
 
-    results = [
-        result_from_state(jax.tree.map(lambda x, i=i: x[i], states), policy)
-        for i in range(len(fracs))
-    ]
-    truncated = [f for f, r in zip(fracs, results)
-                 if r.extras.get("truncated")]
-    if truncated:
-        print(f"  tpch batched sweep WARNING: truncated lanes (livelock "
-              f"guard) at buffer fracs {truncated} — race is invalid",
-              flush=True)
-    print(
-        f"  tpch batched sweep [{policy}, {len(fracs)} buffer points]: "
-        f"vmapped array = {array_wall:.2f}s (cold {array_cold:.2f}s incl. "
-        f"compile) vs sequential event engine = {event_wall:.2f}s "
-        f"-> {'array WINS' if array_wall < event_wall else 'event wins'} "
-        f"({event_wall / max(array_wall, 1e-9):.2f}x)",
-        flush=True,
-    )
+    fixed, hor = steppers["fixed"], steppers["horizon"]
+    ratio = {
+        # per-backend/stepper wall-clock ratios vs the sequential event
+        # engine, plus the headline tentpole ratio: the new default lane
+        # against the PR-4 fixed-dt configuration
+        "event": 1.0,
+        "array_fixed": fixed["speedup_vs_event"],
+        "array_horizon": hor["speedup_vs_event"],
+        "horizon_vs_pr4_fixed": round(
+            fixed["wall_s"] / max(hor["wall_s"], 1e-9), 3),
+    }
+    print(f"  tpch race speedup_ratio: {ratio}", flush=True)
     return {
         "workload": "tpch",
         "policy": policy,
         "fracs": list(fracs),
-        "array_vmapped_wall_s": round(array_wall, 3),
-        "array_cold_wall_s": round(array_cold, 3),
+        "steppers": steppers,
+        "speedup_ratio": ratio,
+        # legacy headline keys = the default batched lane (horizon)
+        "array_vmapped_wall_s": hor["wall_s"],
+        "array_cold_wall_s": hor["cold_wall_s"],
         "event_sequential_wall_s": round(event_wall, 3),
-        "speedup": round(event_wall / max(array_wall, 1e-9), 3),
-        "truncated_fracs": truncated,
-        "array_avg_stream_time_s": [round(r.avg_stream_time, 3)
-                                    for r in results],
+        "speedup": hor["speedup_vs_event"],
+        "truncated_fracs": hor["truncated_fracs"],
+        "array_avg_stream_time_s": hor["avg_stream_time_s"],
         "event_avg_stream_time_s": [round(r.avg_stream_time, 3)
                                     for r in ev_rows],
     }
+
+
+def setup_lane_devices(n: Optional[int] = None) -> None:
+    """Expose several XLA host devices for lane-sharded CPU execution.
+
+    Must run before JAX initialises (the flag is read once at backend
+    creation); a no-op when the flag is already set, when running on a
+    real accelerator platform, or when JAX is already imported.
+
+    Deliberately exposes MORE devices than cores (8 by default): one
+    lane per device lets short lanes finish and hand their cores to the
+    long ones — with one device per core, the slowest lane shares its
+    device with another lane for its whole life, which on a 2-core box
+    costs ~2x on the race (the OS scheduler beats a static lane
+    partition)."""
+    import sys
+
+    if "jax" in sys.modules:
+        return  # too late — keep whatever the session initialised
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    if n is None:
+        n = 8
+    if n > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip()
+        )
 
 
 def main() -> None:
@@ -318,8 +417,18 @@ def main() -> None:
                     help="CI smoke: quick scale, buffer sweep only (same "
                          "semantics as microbench.py --smoke)")
     ap.add_argument("--backend", choices=["event", "array"], default="event")
+    ap.add_argument("--stepper", choices=["fixed", "horizon"],
+                    default="horizon",
+                    help="array time engine for the sweep rows (the race "
+                         "always measures both)")
+    ap.add_argument("--mesh", choices=["auto", "off"], default="auto",
+                    help="lane-sharded execution: spread batched lanes "
+                         "across host devices via shard_map (auto), or "
+                         "run the whole batch on one device (off)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.backend == "array" and args.mesh == "auto":
+        setup_lane_devices()
     smoke_scale = SMOKE_SCALE if args.backend == "array" \
         else EVENT_SMOKE_SCALE
     scale = args.scale if args.scale is not None else (
@@ -333,12 +442,17 @@ def main() -> None:
     for s in sweeps:
         if args.backend == "array":
             rows.extend(sweep_array(s, ARRAY_POLICIES, scale=scale,
-                                    step_pages=2.0 if args.smoke else 1.0))
+                                    step_pages=2.0 if args.smoke else 1.0,
+                                    stepper=args.stepper,
+                                    mesh=args.mesh == "auto"))
         else:
             rows.extend(sweep(s, POLICIES, scale=scale))
     if args.backend == "array":
         race = batched_tpch_race(scale=scale)
-        print(f"  tpch batched race speedup: {race['speedup']}x", flush=True)
+        print(f"  tpch batched race speedup: {race['speedup']}x "
+              f"(horizon vs PR-4 fixed: "
+              f"{race['speedup_ratio']['horizon_vs_pr4_fixed']}x)",
+              flush=True)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=2)

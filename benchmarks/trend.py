@@ -56,10 +56,13 @@ def _fmt_delta(new: float, old: float) -> str:
 
 
 def _race_section(prev_dir: str, cur_dir: str, fname: str) -> List[str]:
-    """Render a batched-race summary (speedup of the vmapped array sweep
+    """Render a batched-race summary (speedup of the batched array sweep
     vs sequential event runs) — the substrate's headline wall-clock trend.
     ``fname`` holds a single summary dict, not a row list (micro and TPC-H
-    each write their own)."""
+    each write their own).  Races carrying the per-backend/stepper
+    ``speedup_ratio`` map (PR 5+) get one row per ratio, and a current
+    ratio more than 20% below the previous run's is flagged as a
+    REGRESSION."""
     def _load_dict(path):
         try:
             with open(path) as f:
@@ -80,8 +83,26 @@ def _race_section(prev_dir: str, cur_dir: str, fname: str) -> List[str]:
             f"| {key} | {cur.get(key)} | {pv.get(key, 'n/a')} | "
             f"{_fmt_delta(cur.get(key), pv.get(key))} |"
         )
+    cur_ratio = cur.get("speedup_ratio") or {}
+    prev_ratio = pv.get("speedup_ratio") or {}
+    regressions = []
+    for key in sorted(cur_ratio):
+        c, p = cur_ratio.get(key), prev_ratio.get(key)
+        flag = ""
+        if isinstance(c, (int, float)) and isinstance(p, (int, float)) \
+                and p > 0 and c < 0.8 * p:
+            flag = " ⚠️ REGRESSION"
+            regressions.append(key)
+        lines.append(
+            f"| speedup_ratio.{key} | {c} | "
+            f"{p if p is not None else 'n/a'} | {_fmt_delta(c, p)}{flag} |"
+        )
     if cur.get("truncated_fracs"):
         lines.append(f"| truncated lanes | {cur['truncated_fracs']} | | |")
+    if regressions:
+        lines.append("")
+        lines.append(f"**⚠️ wall-clock regression >20% in {fname}: "
+                     f"{', '.join(regressions)}**")
     lines.append("")
     return lines
 

@@ -51,6 +51,7 @@ from .policies import (
     ArrayOPT,
     ArrayPBM,
     ArrayPolicy,
+    HorizonView,
     StepCtx,
     next_consumption,
     shift_timeline,
@@ -72,6 +73,7 @@ __all__ = [
     "ArrayPolicy",
     "ArrayResult",
     "ArraySimConfig",
+    "HorizonView",
     "POLICY_IDS",
     "SimSpec",
     "SimState",

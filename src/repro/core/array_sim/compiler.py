@@ -144,6 +144,10 @@ def compile_workload(
     q_cols = np.zeros((S, Q, C), bool)
     q_table = np.zeros((S, Q), np.int32)
     n_q = np.zeros(S, np.int32)
+    # per-column trigger geometry for the event-horizon stepper: the
+    # fastest rate that can ever advance a cursor over this column bounds
+    # how many of its page triggers one macro-step can cross
+    col_max_rate = np.zeros(C, np.float32)
     for si, stream in enumerate(streams):
         n_q[si] = len(stream)
         for qi, spec in enumerate(stream):
@@ -166,7 +170,10 @@ def compile_workload(
                         f"query column {spec.table}.{c} is not in the "
                         f"compiled table set {tnames}"
                     )
-                q_cols[si, qi, cindex[key]] = True
+                ci = cindex[key]
+                q_cols[si, qi, ci] = True
+                col_max_rate[ci] = max(col_max_rate[ci],
+                                       float(spec.tuple_rate))
 
     return SimSpec(
         n_pages=P,
@@ -198,4 +205,5 @@ def compile_workload(
         chunk_first=chunk_first,
         chunk_last=chunk_last,
         chunk_table=chunk_table,
+        col_max_rate=col_max_rate,
     )

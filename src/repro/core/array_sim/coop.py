@@ -347,6 +347,31 @@ def io_phase(cc: CoopConsts, *, done, cur_chunk, inflight, pin_pages,
                   keep_key=keep_key, inflight=inflight2, starved=starved)
 
 
+def chunk_horizon(spec, cstate: CoopState, hz):
+    """Per-stream event horizon of the cooperative model (seconds): a
+    consuming scan's next interesting moment is its current chunk's
+    completion (``(overlap - chunk_pos) / rate``); an idle active scan
+    needs a fine step to run the pick loop; inactive streams contribute
+    nothing.  The chunk — not the page trigger — is CScan's clock, which
+    is why this lives with the substrate and not the in-order step."""
+    CH = int(spec.n_chunks)
+    chunk_first = jnp.asarray(spec.chunk_first)
+    chunk_last = jnp.asarray(spec.chunk_last)
+    ci = jnp.clip(cstate.cur_chunk, 0, CH - 1)
+    ov = jnp.maximum(
+        jnp.minimum(chunk_last[ci], hz.end)
+        - jnp.maximum(chunk_first[ci], hz.start),
+        0.0,
+    )
+    rem_c = jnp.maximum(ov - cstate.chunk_pos, 0.0)
+    t = jnp.where(
+        cstate.cur_chunk >= 0,
+        rem_c / jnp.maximum(hz.rate, 1.0),
+        hz.dt_ref,
+    )
+    return jnp.where(hz.active, t, jnp.float32(np.inf))
+
+
 def clear_on_query_change(done, finished):
     """A finished query's chunk flags reset — the next query registers a
     fresh ``chunks_remaining`` set (new ``ScanState``)."""

@@ -19,6 +19,13 @@ they return must be jit/vmap-safe arrays):
 * :meth:`ArrayPolicy.score_victims` — the policy itself: a ``(P,)`` f32
   eviction priority (higher = evicted first) consumed by the batched
   eviction kernel (``repro.kernels.ops.batched_evict``);
+* :meth:`ArrayPolicy.scan_horizon` — the policy as a **horizon
+  provider** for the event-horizon time engine
+  (``make_runner(stepper="horizon")``): per stream, the seconds until
+  the policy's own state next needs attention.  The in-order candidates
+  (trigger arrival, completion, io-credit) come from the step itself;
+  a policy only overrides this when its consumption model has its own
+  clock — array-CScan reports the current chunk's completion;
 * static knobs: ``request_window`` (per-policy readahead width),
   ``fifo_tie`` (request-cohort service order), ``cooperative`` (the
   policy inverts control flow and schedules loads itself — CScan; the
@@ -167,17 +174,23 @@ class StepCtx:
     """
 
     def __init__(self, *, spec, refresh: bool, time_slice, now, steps,
-                 time_passed, dt, page_first, page_last, page_col,
+                 dt, page_first, page_last, page_col,
                  page_valid, resident, last_used, load_mask, load_cand,
                  load_ok, cross_pidx, crossed, active, cols, cur, end,
-                 start, eps, rate, speed_push, coop=None):
+                 start, eps, rate, speed_push, coop=None,
+                 slices_done=None, time_passed=None,
+                 upd_pages=None, upd_on=None):
         self.spec = spec
         self.refresh = refresh
         self.time_slice = time_slice
         self.now = now                  # f32 sim clock (end of this step)
         self.steps = steps
-        self.time_passed = time_passed  # i32 PBM slices elapsed (pre-step)
-        self.dt = dt
+        if slices_done is None:         # deprecated kwarg spelling
+            slices_done = time_passed
+        self.slices_done = slices_done  # i32 PBM slices elapsed (pre-step)
+        self.time_passed = slices_done  # deprecated alias (it counts slices)
+        self.dt = dt                    # step length: static under the fixed
+                                        # stepper, traced under "horizon"
         self.page_first = page_first
         self.page_last = page_last
         self.page_col = page_col
@@ -189,6 +202,10 @@ class StepCtx:
         self.load_ok = load_ok          # (LOAD_MAX,) bool grant mask
         self.cross_pidx = cross_pidx    # (S, C, W) i32 windowed page ids
         self.crossed = crossed          # (S, C, W) bool triggers crossed
+        self.upd_pages = upd_pages      # (U,) i32 compacted update set —
+        self.upd_on = upd_on            #   loads + crossings deduplicated
+                                        #   (horizon stepper; None = use
+                                        #   the padded load/cross windows)
         self.active = active            # post-advance view ------------
         self.cols = cols                # (S, C) bool
         self.cur = cur                  # (S,) f32 absolute cursor
@@ -236,6 +253,21 @@ class StepCtx:
         return self._eta_exact
 
 
+class HorizonView:
+    """The slim observation window the event-horizon stepper hands to
+    :meth:`ArrayPolicy.scan_horizon`: the post-advance per-stream scan
+    view plus the fine step length.  Built at the END of a step (the
+    horizon describes the NEXT step)."""
+
+    def __init__(self, *, spec, active, start, end, rate, dt_ref):
+        self.spec = spec
+        self.active = active    # (S,) bool post-advance
+        self.start = start      # (S,) f32 absolute scan start
+        self.end = end          # (S,) f32 absolute scan end
+        self.rate = rate        # (S,) f32 true current query rate
+        self.dt_ref = dt_ref    # f32 fine step length (static)
+
+
 class ArrayPolicy:
     """Base protocol: a buffer policy as pure-pytree state + array hooks.
 
@@ -276,6 +308,15 @@ class ArrayPolicy:
         """``(P,) f32`` eviction priority, higher = evicted first.  The
         step masks non-evictable pages and pops the order in batch."""
         raise NotImplementedError
+
+    def scan_horizon(self, pstate, hz: HorizonView):
+        """Per-stream seconds until this policy's state next needs a step
+        (``(S,) f32``), or ``None`` for no policy-specific constraint —
+        the event-horizon stepper then jumps on the step's own candidates
+        alone (trigger arrival, completion, io-credit).  Only policies
+        whose consumption model owns a clock override this (array-CScan:
+        the consuming chunk's completion)."""
+        return None
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"{type(self).__name__}({self.name})"
@@ -341,15 +382,24 @@ class ArrayPBM(ArrayPolicy):
             bucket_pre = jnp.where(
                 ~interested, NR, jnp.where(assign, b_target, bucket)
             ).astype(jnp.int32)
-            return shift_timeline(bucket_pre, b_target, ctx.time_passed,
+            return shift_timeline(bucket_pre, b_target, ctx.slices_done,
                                   jnp.int32(1), nb=spec.nb, m=m)
         # within a slice: one fused gather/scatter over the update set.
         # Combining (min) scatter with an NR+1 sentinel for off entries:
         # duplicate ON entries of one page carry identical b_u (eta is a
         # function of the page alone), so the result is deterministic
-        # even when a page appears both on and off in ``upd``
-        upd = jnp.concatenate([ctx.load_cand, ctx.cross_pidx.reshape(-1)])
-        upd_on = jnp.concatenate([ctx.load_ok, ctx.crossed.reshape(-1)])
+        # even when a page appears both on and off in ``upd``.  The
+        # horizon stepper hands a compacted id list (its cross window is
+        # sized for macro-jumps — walking it padded would cost more than
+        # the whole fixed step); the fixed stepper keeps the padded
+        # windows bit-for-bit.
+        if ctx.upd_pages is not None:
+            upd, upd_on = ctx.upd_pages, ctx.upd_on
+        else:
+            upd = jnp.concatenate(
+                [ctx.load_cand, ctx.cross_pidx.reshape(-1)]
+            )
+            upd_on = jnp.concatenate([ctx.load_ok, ctx.crossed.reshape(-1)])
         eta_u = ctx.eta_estimate_at(upd)
         b_u = target_buckets(eta_u, ctx.time_slice, spec.n_groups, m,
                              jnp.ones(upd.shape[0], bool))
@@ -459,3 +509,10 @@ class ArrayCScan(ArrayPolicy):
             "with this policy in its policies tuple"
         )
         return ctx.coop.keep_key
+
+    def scan_horizon(self, pstate, hz: HorizonView):
+        # the chunk is CScan's clock: nothing interesting happens for a
+        # consuming scan before its current chunk completes; an idle scan
+        # needs a fine step to run the pick loop
+        from .coop import chunk_horizon
+        return chunk_horizon(hz.spec, pstate, hz)

@@ -39,6 +39,21 @@ as a **pure, fixed-shape array program**:
 * everything is ``jax.jit``- and ``jax.vmap``-compatible, so an entire
   sweep axis (buffer sizes x bandwidths x policies) runs as ONE batched
   computation instead of N serial Python event loops;
+* **time itself is modelled two ways** (``make_runner(stepper=...)``):
+  the ``"fixed"`` stepper grinds the classic fixed-``dt`` cadence
+  (bit-compatible with the pre-horizon engine), while the ``"horizon"``
+  stepper exploits the paper's own premise — long scans make the near
+  future *predictable* — by computing, per lane and per step, the
+  earliest **interesting** time (next plan-trigger arrival, next chunk
+  completion, io-credit horizon of the pending request queue, stream
+  completion, next timeline refresh) and advancing all state arrays by
+  that variable ``dt`` in one jump.  Jumps never cross a PBM slice
+  boundary, so the refresh cadence — the paper's semantic clock — is
+  identical in both modes; finished lanes freeze (their metrics are
+  bit-stable while slower lanes continue).  A ``mesh=`` on
+  ``make_runner`` layers ``shard_map`` execution over the lane axis on
+  top, spreading a batched sweep across devices with per-lane horizons
+  intact;
 * workloads may span SEVERAL tables (``compiler.compile_workload``):
   pages live in one global id space with per-column offsets, each query
   row carries its own table's tuple coordinates, and the global column
@@ -54,6 +69,7 @@ registry's stable array id.
 
 from __future__ import annotations
 
+import time as _time
 import warnings
 from dataclasses import dataclass, field
 from typing import List, NamedTuple, Optional, Sequence, Tuple
@@ -64,7 +80,7 @@ import numpy as np
 
 from .. import policy_registry
 from . import coop as coop_mod
-from .policies import BIG_CUT, ArrayPolicy, StepCtx
+from .policies import BIG_CUT, ArrayPolicy, HorizonView, StepCtx
 from .spec import SimSpec
 
 _REQ_NONE = 1 << 24   # FIFO stamp sentinel: page not currently requested
@@ -111,8 +127,12 @@ class SimState(NamedTuple):
     stream_done_t: jax.Array  # f32 finish time, -1 while running
     # ---- scalars ---------------------------------------------------------
     t: jax.Array              # f32 sim clock
-    steps: jax.Array          # i32
-    time_passed: jax.Array    # i32 PBM slices elapsed
+    steps: jax.Array          # i32 simulation steps executed (macro steps
+                              #   under the horizon stepper)
+    slices_done: jax.Array    # i32 PBM slices elapsed — the livelock guard
+                              #   compares THIS against max_slices (the old
+                              #   name ``time_passed`` miscounted: it was
+                              #   always a slice count, never a time)
     io_credit: jax.Array      # f32 banked I/O bytes (partial in-flight load)
     io_bytes: jax.Array       # f32 lifetime loaded bytes (paper I/O volume)
     loads: jax.Array          # i32 lifetime page loads
@@ -120,6 +140,15 @@ class SimState(NamedTuple):
     churn: jax.Array          # i32 loads evicted before any consumption
     # ---- policy-private state (one pytree per compiled ArrayPolicy) ------
     pstate: Tuple = ()
+
+    @property
+    def time_passed(self) -> jax.Array:
+        """Deprecated alias of :attr:`slices_done` (the counter always
+        counted PBM slices, not time — the old name suggested otherwise)."""
+        _warn_once("time-passed",
+                   "SimState.time_passed is deprecated; it counts slices "
+                   "and is now named SimState.slices_done")
+        return self.slices_done
 
 
 @dataclass
@@ -271,7 +300,7 @@ def init_state(spec: SimSpec,
         stream_done_t=jnp.where(n_q > 0, -1.0, 0.0).astype(jnp.float32),
         t=jnp.float32(0.0),
         steps=jnp.int32(0),
-        time_passed=jnp.int32(0),
+        slices_done=jnp.int32(0),
         io_credit=jnp.float32(0.0),
         io_bytes=jnp.float32(0.0),
         loads=jnp.int32(0),
@@ -301,8 +330,9 @@ def _evict_candidates(spec: SimSpec) -> int:
 def make_step(spec: SimSpec, dt: float, time_slice: float,
               prefetch_pages: int = 8, refresh: bool = False,
               policies: Sequence[ArrayPolicy] = ("lru", "pbm"),
-              vmax: Optional[int] = None):
-    """Build the pure ``step(state, cfg) -> state`` for a policy set.
+              vmax: Optional[int] = None, stepper: str = "fixed",
+              h_max: float = 8.0, h_io: float = 3.0):
+    """Build the pure ``step(carry, cfg) -> carry`` for a policy set.
 
     ``refresh=False`` is the cheap within-slice step; ``refresh=True`` is
     the once-per-``time_slice`` boundary step (the policies' ``StepCtx``
@@ -315,9 +345,32 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
     step (no stacking, no unused machinery); compiling a cooperative
     policy (array-CScan) additionally builds the chunk-granular ABM
     substrate and blends the two consumption models per lane.
+
+    ``stepper`` picks the time model:
+
+    * ``"fixed"`` — every step advances the static ``dt``; the carry is
+      ``(state, view)`` (bit-compatible with the pre-horizon engine);
+    * ``"horizon"`` — the step advances a **variable** ``dt``: each step
+      closes by computing the next step's event horizon (the earliest
+      interesting time over the trigger-arrival / chunk-completion /
+      io-credit / completion candidates, clipped to ``[dt, h_max*dt]``)
+      together with the trigger window of the post-advance view, and the
+      carry ``(state, view, win, rem, next_dt)`` threads both forward —
+      so the window math is computed once per step in either mode.
+      ``rem`` is the whole-fine-step budget left in the current PBM
+      slice; the cheap step jumps ``min(next_h, rem - 1)`` fine steps
+      and the refresh step absorbs the final (``<= h_max``) jump, which
+      is what lets an uneventful slice collapse to ``ceil(n_inner /
+      h_max)`` macro-steps — one at the smoke scales, where the slice
+      fits inside ``h_max``.  ``h_io`` bounds
+      the jump, in fine steps, while requests are pending — the
+      wake-quantisation knob of the I/O-bound regime.
     """
     from repro.kernels import ops as kops
 
+    if stepper not in ("fixed", "horizon"):
+        raise ValueError(f"unknown stepper {stepper!r}: fixed | horizon")
+    horizon = stepper == "horizon"
     policies = resolve_policies(policies)
     P, S, Q, C = spec.n_pages, spec.n_streams, spec.n_queries, spec.n_cols
     vmax = _evict_candidates(spec) if vmax is None else int(vmax)
@@ -327,9 +380,39 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
     # only needs to walk K_LOOP+1 slots per (stream, column)
     K_LOOP = min(K, 4)
     # static per-column trigger lookahead: the most page triggers a scan
-    # can cross in one step, plus one for the conservative advance cap
-    W = spec.trigger_window(float(dt))
-    dt = jnp.float32(dt)
+    # can cross in one step, plus one for the conservative advance cap.
+    # The horizon stepper sizes it for the longest jump it can take —
+    # h_max fine steps, or the whole slice when that is shorter (every
+    # jump, the refresh tail included, is bounded by min(h_max, n_inner)
+    # fine steps: inner_cond hands the tail to the refresh step only
+    # once the clipped next_h reaches it),
+    # with the compiler's per-column max-rate geometry keeping the window
+    # from exploding on columns no fast scan ever touches.
+    # one PBM slice is a whole number of fine steps (the fixed cadence
+    # always rounded it so, and the whole validated envelope of PR 1-4
+    # was fit against that rounding with the bucket math still using the
+    # configured ``time_slice``).  The horizon stepper keeps BOTH: its
+    # macro-steps are integer multiples of the fine step (``h`` fine
+    # steps in one jump — which makes a non-jumping horizon run
+    # bit-equal to the fixed stepper), and its slice budget is the same
+    # ``n_inner`` fine steps.  At the deep-thrash operating points the
+    # churn spiral is cliff-sensitive even to sub-ulp step-length drift
+    # (a byte-credit equality at the grant boundary), which is exactly
+    # why time is quantised instead of accumulated as f32 remainders.
+    n_inner = max(1, int(round(time_slice / float(dt))))
+    if horizon:
+        h_max_i = max(1, int(round(h_max)))
+        dt_long = float(dt) * min(h_max_i, n_inner)
+        W = spec.trigger_window(max(float(dt), dt_long), tight=True)
+        # budgeted FIFO pops per step: enough to drain an h_io-page jump
+        # plus the banked credit (the fixed step's 6 cover ~2 pages + bank)
+        n_rounds = max(_LOAD_MAX, int(round(h_io)) + 2)
+    else:
+        h_max_i = 1
+        W = spec.trigger_window(float(dt))
+        n_rounds = _LOAD_MAX
+    dt_ref = jnp.float32(dt)
+    h_io_f = jnp.float32(h_io)
     time_slice_f = jnp.float32(time_slice)
 
     page_size = jnp.asarray(spec.page_size)
@@ -348,6 +431,9 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
     s_idx = jnp.arange(S)
     max_page = jnp.float32(float(np.max(spec.page_size)))
     INF = jnp.float32(np.inf)
+    # supersaturation threshold for the horizon's io-credit candidate: the
+    # aggregate plan-window bytes every stream can keep requested at once
+    sat_bytes = jnp.float32(S * K * float(np.max(spec.page_size)))
 
     # ---- policy dispatch tables (policy-provided, id-indexed) ------------
     n_pol = len(policies)
@@ -428,8 +514,51 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             return coop_val
         return jnp.where(is_coop, coop_val, inorder_val)
 
-    def step(carry, cfg: ArraySimConfig):
-        state, view = carry
+    # window of the next W+1 page triggers per (stream, column): entries
+    # w < W gate the advance (block at the first absent trigger), entry
+    # W is the conservative cap so one step never outruns the window
+    wk = jnp.arange(W + 1)                                  # (W+1,)
+
+    def window(view: _View):
+        """Trigger-window geometry of a view: global page ids, triggers,
+        need mask and cursor distance of the next W+1 plan triggers per
+        (stream, column).  The fixed step computes it on its own view;
+        the horizon step computes it once on the post-advance view and
+        carries it to the next step (this step's ``view2`` window IS the
+        next step's ``view`` window)."""
+        w_local = view.frontier[:, :, None] + wk[None, None, :]
+        w_pidx = col_start[None, :, None] + jnp.minimum(
+            w_local, col_npages[None, :, None] - 1
+        )
+        w_trig = jnp.maximum(page_first[w_pidx], view.start[:, None, None])
+        w_need = (
+            view.fneed[:, :, None]
+            & (w_local < col_npages[None, :, None])
+            & (page_first[w_pidx] < view.end[:, None, None])
+        )
+        w_dist = jnp.maximum(w_trig - view.cur[:, None, None], 0.0)
+        return w_pidx, w_trig, w_need, w_dist
+
+    def adv_limit(win, resident):
+        """Per-stream advance limit against a residency: distance to the
+        first absent trigger, capped at the (W+1)-th trigger when every
+        windowed page is resident (W is sized so the cap exceeds the
+        longest step's advance for a full window)."""
+        w_pidx, _w_trig, w_need, w_dist = win
+        absent = w_need[:, :, :W] & ~resident[w_pidx[:, :, :W]]
+        lim = jnp.min(jnp.where(absent, w_dist[:, :, :W], INF), axis=2)
+        cap = jnp.where(w_need[:, :, W], w_dist[:, :, W], INF)
+        return jnp.min(jnp.minimum(lim, cap), axis=1)       # (S,)
+
+    def core(state: SimState, view: _View, win, cfg: ArraySimConfig, dt,
+             h_u, adv_lim_in=None, pend_in=None):
+        """One simulation step of length ``dt`` == ``h_u`` fine steps
+        (``h_u`` is the static 1 under the fixed stepper, a traced i32
+        under the horizon stepper — a macro-step stands in for ``h_u``
+        fine steps and scales the per-fine-step processes accordingly).
+        ``adv_lim_in`` is the carried advance limit the previous horizon
+        step computed against this step's residency (the horizon IS that
+        computation, so it is never done twice)."""
         # a config whose policy id is NOT in this step's compiled set must
         # not silently run as some other policy (a mislabeled lane in a
         # stacked sweep would be wrong science with no diagnostic).  A jit
@@ -454,28 +583,16 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         # the pool into a stable always-evicted side and a resident elite
         # whose hit rate the event engine (with its total event-order
         # recency) never reaches.  A deterministic per-(page, step) hash
-        # spanning _JIT_STEPS step-lengths reproduces the engine's order
-        # noise (its touch events spread over multi-step burst intervals,
-        # so recency may genuinely invert across a few neighbouring steps)
-        # while staying pure for jit/vmap (no RNG state).  The amplitude
-        # is calibrated against the event engine at the small-pool points.
-        jit_p = _JIT_STEPS * dt * _u01(jnp.arange(P, dtype=jnp.uint32),
-                                       state.steps, 40503)
-        # window of the next W+1 page triggers per (stream, column): entries
-        # w < W gate the advance (block at the first absent trigger), entry
-        # W is the conservative cap so one step never outruns the window
-        wk = jnp.arange(W + 1)                              # (W+1,)
-        w_local = frontier[:, :, None] + wk[None, None, :]  # (S, C, W+1)
-        w_pidx = col_start[None, :, None] + jnp.minimum(
-            w_local, col_npages[None, :, None] - 1
-        )
-        w_trig = jnp.maximum(page_first[w_pidx], start[:, None, None])
-        w_need = (
-            fneed[:, :, None]
-            & (w_local < col_npages[None, :, None])
-            & (page_first[w_pidx] < end[:, None, None])
-        )
-        w_dist = jnp.maximum(w_trig - cur[:, None, None], 0.0)
+        # spanning _JIT_STEPS fine-step-lengths reproduces the engine's
+        # order noise (its touch events spread over multi-step burst
+        # intervals, so recency may genuinely invert across a few
+        # neighbouring steps) while staying pure for jit/vmap (no RNG
+        # state).  The amplitude is calibrated against the event engine at
+        # the small-pool points, in units of the FINE step — a horizon
+        # macro-step must not inflate it.
+        jit_p = _JIT_STEPS * dt_ref * _u01(jnp.arange(P, dtype=jnp.uint32),
+                                           state.steps, 40503)
+        w_pidx, w_trig, w_need, w_dist = win                # (S, C, W+1)
         # per-(stream, query) CPU-rate skew: the event engine's burst
         # granularity paces each scan on its own event clock, so two scans
         # at the same position drift apart within a query; the fluid step
@@ -487,13 +604,8 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         # (stream, query): pure, vmap-safe, zero-mean across queries.
         ur = _u01(jnp.arange(S, dtype=jnp.uint32), state.qidx, 48271)
         rate_j = rate * (1.0 + _RATE_JIT * (2.0 * ur - 1.0))
-        absent = w_need[:, :, :W] & ~state.resident[w_pidx[:, :, :W]]
-        # per-column advance limit: distance to the first absent trigger,
-        # capped at the (W+1)-th trigger when every windowed page is
-        # resident (W is sized so the cap exceeds rate*dt for a full window)
-        lim = jnp.min(jnp.where(absent, w_dist[:, :, :W], INF), axis=2)
-        cap = jnp.where(w_need[:, :, W], w_dist[:, :, W], INF)
-        adv_lim = jnp.min(jnp.minimum(lim, cap), axis=1)    # (S,)
+        adv_lim = adv_limit(win, state.resident) if adv_lim_in is None \
+            else adv_lim_in
         runnable = active & (adv_lim > 0.0)
         remaining = length - state.pos
         adv_io = jnp.where(
@@ -639,6 +751,17 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             0.0, 1.0,
         )
         gate_p = _GATE_P * (1.0 - duty_g)
+        if horizon:
+            # a macro-step stands in for h_u fine steps: the blocked-scan
+            # window-refresh is a per-fine-step Bernoulli process, so the
+            # macro step fires it with the compounded probability —
+            # otherwise longer jumps would silently freeze blocked
+            # windows.  h_u == 1 keeps gate_p exactly (bit-parity with
+            # the fixed stepper; pow would round at the ulp level).
+            gate_p = jnp.where(
+                h_u == 1, gate_p,
+                1.0 - (1.0 - gate_p) ** h_u.astype(jnp.float32),
+            )
         gate = (
             (adv_io > 0.0) | (state.steps == 0) | finished | (ug < gate_p)
         )
@@ -761,34 +884,80 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         headroom = free + evictable_bytes
         credit = state.io_credit + cfg.bandwidth * dt
 
-        # the server grants at most ~credit bytes (a handful of pages) per
-        # step: pop the FIFO head a few times instead of sorting anything.
-        # Head-of-line semantics: the first page that does not fit blocks
-        # the rest of the queue, like the engine's serial server.
-        kcur = load_key
-        taken = jnp.float32(0.0)
-        open_ = jnp.bool_(True)
         # an invalid lane's server grants nothing (ok_id freeze)
         budget = jnp.where(ok_id, jnp.minimum(credit, headroom), 0.0)
-        arange_p = jnp.arange(P)
-        hit = jnp.zeros(P, bool)
-        cand = []
-        cand_ok = []
-        for _ in range(_LOAD_MAX):
-            j = jnp.argmax(kcur)
-            ok_j = open_ & (kcur[j] >= 0) & (taken + page_size[j] <= budget)
-            open_ = ok_j
-            is_j = arange_p == j       # arithmetic mask: fuses, scatter won't
-            hit = hit | (is_j & ok_j)
-            taken = taken + jnp.where(ok_j, page_size[j], 0.0)
-            kcur = jnp.where(is_j, -1, kcur)
-            cand.append(j)
-            cand_ok.append(ok_j)
-        load_mask = hit
-        cand = jnp.stack(cand)                         # (LOAD_MAX,)
-        cand_ok = jnp.stack(cand_ok)
-        load_bytes = taken
-        n_load = jnp.sum(cand_ok)
+        if horizon:
+            # serial-server causality over a macro-step: credit accrued
+            # while the queue was EMPTY must not fund requests that only
+            # appear at the end of the jump (the engine's idle server
+            # banks about one fine step of work, no more).  Cap this
+            # step's serviceable bytes at the queue content present when
+            # the jump began plus one fine step's credit — which also
+            # makes the cap vacuous at h_u == 1 (fixed-stepper parity).
+            # The queue bytes were computed by the previous step's
+            # horizon (they ARE its io-credit candidate) and carried.
+            pend_bytes0 = pend_in
+            if has_coop:
+                infl0 = cstate.inflight
+                pend_c0 = (
+                    (cc.page_chunk == jnp.clip(infl0, 0, cc.n_chunks - 1))
+                    & (infl0 >= 0) & ~state.resident & page_valid
+                )
+                pend_bytes0 = _sel(
+                    is_coop, jnp.sum(page_size * pend_c0), pend_bytes0
+                )
+            budget = jnp.minimum(
+                budget,
+                state.io_credit + pend_bytes0 + cfg.bandwidth * dt_ref,
+            )
+            # budgeted FIFO pop as ONE batched grant op — the macro grant
+            # covers an h_io-fine-step jump without n_rounds serial
+            # argmax passes over the page axis (Pallas MXU prefix kernel
+            # on TPU, top_k + prefix-product oracle elsewhere).
+            # Semantics match the fixed loop: strict head-of-line (the
+            # first page that does not fit blocks the rest), ties by
+            # lower page index, _LOAD_MAX pops per fine step stood in
+            # for — all inside the static n_rounds top-k window, which
+            # therefore also caps a multi-step grant's pop count (the
+            # byte budget of an h_io-step jump fits the window at the
+            # validated operating points; credit a short window leaves
+            # unspent banks for the next step, like the fixed path's
+            # leftover credit).
+            pops = jnp.minimum(h_u * _LOAD_MAX, n_rounds)
+            load_mask, load_bytes, n_load = kops.fifo_grant(
+                load_key, page_size, budget, pops, vmax=n_rounds,
+            )
+            cand = cand_ok = None
+        else:
+            # the server grants at most ~credit bytes (a handful of pages)
+            # per step: pop the FIFO head a few times instead of sorting
+            # anything.  Head-of-line semantics: the first page that does
+            # not fit blocks the rest of the queue, like the engine's
+            # serial server.
+            kcur = load_key
+            taken = jnp.float32(0.0)
+            open_ = jnp.bool_(True)
+            arange_p = jnp.arange(P)
+            hit = jnp.zeros(P, bool)
+            cand = []
+            cand_ok = []
+            for _ in range(n_rounds):
+                j = jnp.argmax(kcur)
+                ok_j = open_ & (kcur[j] >= 0) & (
+                    taken + page_size[j] <= budget
+                )
+                open_ = ok_j
+                is_j = arange_p == j   # arithmetic mask: fuses, scatter won't
+                hit = hit | (is_j & ok_j)
+                taken = taken + jnp.where(ok_j, page_size[j], 0.0)
+                kcur = jnp.where(is_j, -1, kcur)
+                cand.append(j)
+                cand_ok.append(ok_j)
+            load_mask = hit
+            cand = jnp.stack(cand)                     # (n_rounds,)
+            cand_ok = jnp.stack(cand_ok)
+            load_bytes = taken
+            n_load = jnp.sum(cand_ok)
 
         # bank leftover credit instead of zeroing it whenever the request
         # queue went momentarily empty — that dropped the partially-funded
@@ -820,13 +989,35 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         )
 
         # ================= policy hooks + batched eviction ================
+        # pages whose consumption state changed this step (feeds the churn
+        # diagnostic below and PBM's within-slice update set)
+        was_crossed = jnp.zeros(P, bool).at[cross_pidx].max(crossed)
+        if has_coop:
+            was_crossed = _sel(is_coop, coop_cpu.consumed_pages,
+                               was_crossed)
+        if horizon:
+            # compacted within-slice update set: the padded (S, C, W)
+            # cross window grows with the horizon's longer trigger
+            # lookahead, but the pages that actually changed stay few —
+            # hand the policies a dense id list instead of the padded
+            # window (duplicates and the fill id carry ``upd_on`` False
+            # or an identical update value, so the min-combining scatter
+            # is unchanged; overflow beyond the static cap merely leaves
+            # a page's bucket stale until the slice refresh).
+            upd_mask = (was_crossed | load_mask) & page_valid
+            upd_pages = jnp.nonzero(upd_mask, size=min(P, 512),
+                                    fill_value=0)[0]
+            upd_on = upd_mask[upd_pages]
+        else:
+            upd_pages = upd_on = None
         ctx = StepCtx(
             spec=spec, refresh=refresh, time_slice=time_slice_f, now=t2,
-            steps=state.steps, time_passed=state.time_passed, dt=dt,
+            steps=state.steps, slices_done=state.slices_done, dt=dt,
             page_first=page_first, page_last=page_last, page_col=page_col,
             page_valid=page_valid, resident=state.resident,
             last_used=last_used2, load_mask=load_mask, load_cand=cand,
             load_ok=cand_ok, cross_pidx=cross_pidx, crossed=crossed,
+            upd_pages=upd_pages, upd_on=upd_on,
             active=active2, cols=cols2, cur=cur2, end=end2, start=start2,
             eps=eps2, rate=rate2, speed_push=speed_push,
             coop=coop_io if has_coop else None,
@@ -854,9 +1045,9 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             # pages no active scan is interested in leave the queue
             interested = (ctx.eta_estimate() < BIG_CUT) & page_valid
             req_step2 = jnp.where(interested, req_step2, _REQ_NONE)
-            time_passed2 = state.time_passed + 1
+            slices_done2 = state.slices_done + 1
         else:
-            time_passed2 = state.time_passed
+            slices_done2 = state.slices_done
 
         # engine parity: evictions are amortised in batches (>= 16 pages),
         # so a triggered eviction frees up to a whole batch, not one page.
@@ -885,10 +1076,6 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         last_used3 = jnp.where(load_mask, t2 + jit_p, last_used2)
         # churn diagnostic: a page evicted while still "fresh" (loaded but
         # never consumed since) was a wasted load
-        was_crossed = jnp.zeros(P, bool).at[cross_pidx].max(crossed)
-        if has_coop:
-            was_crossed = _sel(is_coop, coop_cpu.consumed_pages,
-                               was_crossed)
         fresh2 = jnp.where(load_mask, True,
                            state.fresh & ~was_crossed & resident2)
         churn2 = state.churn + jnp.sum(state.fresh & evict & ~was_crossed)
@@ -911,7 +1098,7 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             stream_done_t=stream_done_t2,
             t=t2,
             steps=state.steps + 1,
-            time_passed=time_passed2,
+            slices_done=slices_done2,
             io_credit=io_credit2,
             io_bytes=state.io_bytes + load_bytes,
             loads=state.loads + n_load,
@@ -919,10 +1106,117 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             churn=churn2,
             pstate=tuple(pstate2),
         )
-        return new_state, view2
+        if not horizon:
+            return new_state, view2, None
 
+        # ================= event horizon of the NEXT step =================
+        # The earliest "interesting" time ahead, from the same machinery
+        # the policies already expose: the post-advance trigger window
+        # (computed here ONCE and carried — it is the next step's view
+        # window), the pending request queue, the cooperative chunk state,
+        # and the per-policy scan_horizon hooks.  Everything is a lower
+        # bound on "nothing the discretisation cares about happens before
+        # then"; overshoot is impossible because the CPU advance clamps at
+        # the first absent trigger and the refresh cadence is capped by
+        # the slice remainder in the runner's loop nest.
+        win2 = window(view2)
+        adv_lim2 = adv_limit(win2, resident2)
+        runnable2 = active2 & (adv_lim2 > 0.0)
+        remaining2 = jnp.maximum(_l2 - pos2, 0.0)
+        # next trigger arrival / stream completion: how long each runnable
+        # scan can burn CPU before it blocks, finishes, or outruns the
+        # window cap (rate without the per-query jitter: an 8% overshoot
+        # only means the scan blocks slightly before the jump ends)
+        t_cpu = jnp.where(
+            runnable2,
+            jnp.minimum(adv_lim2, remaining2) / jnp.maximum(rate2, 1.0),
+            INF,
+        )
+        # io-credit horizon: while requests are pending the server is the
+        # clock — jump at most h_io page-transfer times at the lane's own
+        # bandwidth (the wake-quantisation knob; blocked scans wake at
+        # jump end instead of mid-jump).  SUPERSATURATED lanes do not
+        # jump at all: a pool smaller than the scans' aggregate plan
+        # window (streams x readahead entries) lives in the engine's
+        # churn-spiral regime, where the future is NOT predictable and
+        # wake quantisation feeds the spiral — exactly the regime the
+        # paper's premise excludes.  Those lanes keep the fine cadence
+        # (bit-equal to the fixed stepper) while roomier lanes jump.
+        pend_bytes2 = jnp.sum(jnp.where(
+            (req_step3 != _REQ_NONE) & ~resident2 & page_valid,
+            page_size, 0.0,
+        ))
+        pend2 = pend_bytes2 > 0.0
+        sat = cfg.capacity_bytes < sat_bytes
+        t_io_pend = jnp.where(sat, 0.0, h_io_f * dt_ref)
+        t_io = jnp.where(pend2, t_io_pend, INF)
+        if has_coop:
+            # cooperative lanes: the in-order trigger candidate is
+            # meaningless (consumption is chunk-granular, out of order);
+            # the chunk in flight plays the pending queue's role
+            t_cpu = _sel(is_coop, jnp.full(S, INF), t_cpu)
+            t_io = _sel(
+                is_coop,
+                jnp.where(coop_io.inflight >= 0, t_io_pend, INF),
+                t_io,
+            )
+        # per-policy horizon providers (ArrayPolicy.scan_horizon): e.g.
+        # array-CScan reports each stream's current-chunk completion
+        hz = HorizonView(spec=spec, active=active2, start=start2, end=end2,
+                         rate=rate2, dt_ref=dt_ref)
+        t_tab = [p.scan_horizon(ps, hz) for p, ps in zip(policies, pstate2)]
+        if any(t is not None for t in t_tab):
+            t_tab = [jnp.full(S, INF) if t is None else t for t in t_tab]
+            t_pol = t_tab[0] if n_pol == 1 else \
+                jnp.stack(t_tab)[pol_local]
+            t_pol_min = jnp.min(t_pol)
+        else:
+            t_pol_min = INF
+        next_dt = jnp.minimum(jnp.minimum(jnp.min(t_cpu), t_io), t_pol_min)
+        # quantise to whole fine steps (floor: undershooting a horizon
+        # only costs an extra step; overshooting would cost fidelity)
+        next_h = jnp.clip(
+            jnp.floor(next_dt / dt_ref).astype(jnp.int32), 1, h_max_i
+        )
+        return new_state, view2, (win2, adv_lim2, pend_bytes2, next_h)
+
+    if not horizon:
+        def step(carry, cfg: ArraySimConfig):
+            state, view = carry
+            new_state, view2, _ = core(state, view, window(view), cfg,
+                                       dt_ref, 1)
+            return new_state, view2
+    elif refresh:
+        def step(carry, cfg: ArraySimConfig):
+            # slice-boundary step: absorb the slice remainder (at most
+            # h_max fine steps — inner_cond only hands the tail over
+            # once next_h reaches it), then re-arm the slice budget of
+            # n_inner fine steps
+            state, view, win, adv_lim, pend, rem_u, _next_h = carry
+            new_state, view2, (win2, adv_lim2, pend2, next_h2) = core(
+                state, view, win, cfg,
+                rem_u.astype(jnp.float32) * dt_ref, rem_u, adv_lim, pend,
+            )
+            return (new_state, view2, win2, adv_lim2, pend2,
+                    jnp.int32(n_inner), next_h2)
+    else:
+        def step(carry, cfg: ArraySimConfig):
+            # within-slice macro-step: jump to the event horizon, keeping
+            # at least one fine step of slice for the refresh to absorb
+            state, view, win, adv_lim, pend, rem_u, next_h = carry
+            h = jnp.minimum(next_h, rem_u - 1)
+            new_state, view2, (win2, adv_lim2, pend2, next_h2) = core(
+                state, view, win, cfg,
+                h.astype(jnp.float32) * dt_ref, h, adv_lim, pend,
+            )
+            return (new_state, view2, win2, adv_lim2, pend2, rem_u - h,
+                    next_h2)
+
+    step.adv_limit = adv_limit
     step.query_view = query_view
+    step.window = window
     step.policies = policies
+    step.trigger_w = W
     return step
 
 
@@ -939,15 +1233,36 @@ def make_runner(
     step_pages: float = 1.0,
     vmax: Optional[int] = None,
     static_policy=_UNSET,
+    stepper: str = "fixed",
+    h_max: float = 8.0,
+    h_io: float = 3.0,
+    mesh=None,
 ):
     """Jitted ``run(cfg) -> SimState``: steps until every stream finishes.
 
-    The step length is ``step_pages`` page-transfer times at
+    The fine step length is ``step_pages`` page-transfer times at
     ``bandwidth_ref`` (other bandwidths flow through the per-step byte
     credit), and the PBM timeline refreshes structurally every
     ``time_slice`` — the refresh cadence is compiled into the loop nest
     instead of branching per step.  ``step_pages > 1`` is the coarse fast
     mode for batched sweeps: ~2x fewer steps for a few % fidelity.
+
+    ``stepper`` picks the time engine:
+
+    * ``"fixed"`` — every slice is ``round(time_slice/dt)`` fixed-length
+      steps (bit-compatible with the pre-horizon engine);
+    * ``"horizon"`` — each slice is a ``while`` of variable-length
+      macro-steps: every step jumps to the event horizon the previous
+      step computed (next trigger arrival / chunk completion / io-credit
+      exhaustion / stream completion, capped at ``h_max`` fine steps and
+      at the slice boundary), and the slice-boundary refresh step absorbs
+      whatever remains — an uneventful slice is ONE step.  ``h_io``
+      bounds the jump, in fine steps, while requests are pending (the
+      wake-quantisation knob, calibrated against the validation bars);
+      supersaturated lanes (pool below the scans' aggregate plan-window
+      bytes) never jump while pending — the churn-spiral regime needs
+      the fine cadence.  Finished lanes freeze at their final state
+      while slower lanes continue.
 
     ``policies`` is the set of registry policies the runner's lanes may
     select (names or ``ArrayPolicy`` objects); the default is EVERY
@@ -958,7 +1273,12 @@ def make_runner(
     pre-registry spelling of that single-policy case.
 
     vmap-ready: ``jax.vmap(make_runner(spec))`` over a stacked config runs
-    a whole sweep axis in one call.
+    a whole sweep axis in one call.  With ``mesh`` (a one-axis
+    ``jax.sharding.Mesh`` over the devices to use), the returned runner
+    instead takes a STACKED config directly and executes it as a
+    ``shard_map`` over the lane axis — lanes spread across the mesh
+    devices, each shard running the vmapped runner with per-lane horizons
+    intact; the lane count must divide the mesh size evenly.
     """
     if static_policy is not _UNSET:
         _warn_once(
@@ -971,37 +1291,92 @@ def make_runner(
             policies = (static_policy,)
     pols = resolve_policies(policies)
     dt = float(step_pages) * float(np.max(spec.page_size)) / float(bandwidth_ref)
-    n_inner = max(1, int(round(time_slice / dt)))
     cheap = make_step(spec, dt, time_slice, prefetch_pages, refresh=False,
-                      policies=pols, vmax=vmax)
+                      policies=pols, vmax=vmax, stepper=stepper,
+                      h_max=h_max, h_io=h_io)
     full = make_step(spec, dt, time_slice, prefetch_pages, refresh=True,
-                     policies=pols, vmax=vmax)
+                     policies=pols, vmax=vmax, stepper=stepper,
+                     h_max=h_max, h_io=h_io)
 
-    def run(cfg: ArraySimConfig) -> SimState:
-        state = init_state(spec, pols)
-        carry = (state, cheap.query_view(state.qidx, state.pos))
+    if stepper == "fixed":
+        n_inner = max(1, int(round(time_slice / dt)))
 
-        def slice_body(c):
-            c = jax.lax.fori_loop(
-                0, n_inner - 1, lambda i, s: cheap(s, cfg), c
+        def run(cfg: ArraySimConfig) -> SimState:
+            state = init_state(spec, pols)
+            carry = (state, cheap.query_view(state.qidx, state.pos))
+
+            def slice_body(c):
+                c = jax.lax.fori_loop(
+                    0, n_inner - 1, lambda i, s: cheap(s, cfg), c
+                )
+                return full(c, cfg)
+
+            def cond(c):
+                st = c[0]
+                return (
+                    jnp.any(st.stream_done_t < 0)
+                    & (st.t < cfg.max_time)
+                    & (st.slices_done < max_slices)
+                )
+
+            return jax.lax.while_loop(cond, slice_body, carry)[0]
+    else:
+        n_inner = max(1, int(round(time_slice / dt)))
+
+        def run(cfg: ArraySimConfig) -> SimState:
+            state = init_state(spec, pols)
+            view0 = cheap.query_view(state.qidx, state.pos)
+            win0 = cheap.window(view0)
+            carry = (state, view0, win0,
+                     cheap.adv_limit(win0, state.resident),
+                     jnp.float32(0.0), jnp.int32(n_inner), jnp.int32(1))
+
+            def inner_cond(c):
+                # keep macro-stepping while the slice has more than one
+                # fine step left AND the planned jump falls short of the
+                # boundary — otherwise hand the tail to the refresh step
+                rem_u, next_h = c[5], c[6]
+                return (rem_u > 1) & (next_h < rem_u)
+
+            def slice_body(c):
+                c = jax.lax.while_loop(
+                    inner_cond, lambda s: cheap(s, cfg), c
+                )
+                return full(c, cfg)
+
+            def cond(c):
+                st = c[0]
+                return (
+                    jnp.any(st.stream_done_t < 0)
+                    & (st.t < cfg.max_time)
+                    & (st.slices_done < max_slices)
+                )
+
+            return jax.lax.while_loop(cond, slice_body, carry)[0]
+
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"make_runner(mesh=...) wants a one-axis lane mesh, got "
+                f"axes {mesh.axis_names}"
             )
-            return full(c, cfg)
-
-        def cond(c):
-            st = c[0]
-            return (
-                jnp.any(st.stream_done_t < 0)
-                & (st.t < cfg.max_time)
-                & (st.time_passed < max_slices)
-            )
-
-        return jax.lax.while_loop(cond, slice_body, carry)[0]
-
-    return jax.jit(run)
+        pspec = jax.sharding.PartitionSpec(mesh.axis_names[0])
+        runner = jax.jit(shard_map(
+            jax.vmap(run), mesh=mesh,
+            in_specs=(pspec,), out_specs=pspec, check_rep=False,
+        ))
+    else:
+        runner = jax.jit(run)
+    runner.dt_ref = dt
+    runner.stepper = stepper
+    runner.lane_mesh = mesh
+    return runner
 
 
 def result_from_state(state: SimState, policy, sim_wall: float = 0.0,
-                      ) -> ArrayResult:
+                      dt_ref: Optional[float] = None) -> ArrayResult:
     """Convert a finished (device) state into an :class:`ArrayResult`.
 
     A run cut short by the ``max_time``/``max_slices`` livelock guard is
@@ -1009,6 +1384,13 @@ def result_from_state(state: SimState, policy, sim_wall: float = 0.0,
     ``t_end`` to ``stream_times`` (a lower bound), but the result carries
     ``extras["truncated"] = True`` plus the unfinished-stream count so
     harnesses can refuse to compare it against a finished event run.
+
+    ``dt_ref`` (the runner's fine-step length, ``runner.dt_ref``) makes
+    the time engine's work observable instead of inferred: extras report
+    ``steps``/``macro_steps`` (steps actually executed) plus
+    ``skipped_time`` (simulated seconds covered beyond one fine step per
+    step — 0 under the fixed stepper, the jumped time under the horizon
+    stepper).
     """
     done_t = np.asarray(state.stream_done_t, np.float64)
     t_end = float(state.t)
@@ -1018,20 +1400,27 @@ def result_from_state(state: SimState, policy, sim_wall: float = 0.0,
         name = policy
     else:
         name = policy_registry.array_name(int(policy)) or str(policy)
+    steps = int(state.steps)
+    extras = {
+        "truncated": unfinished > 0,
+        "unfinished_streams": unfinished,
+        "churn_loads": int(state.churn),
+        "demand_loads": int(state.loads_demand),
+        "steps": steps,
+        "macro_steps": steps,
+        "slices_done": int(state.slices_done),
+    }
+    if dt_ref is not None:
+        extras["skipped_time"] = round(max(0.0, t_end - steps * dt_ref), 6)
     return ArrayResult(
         policy=name,
         stream_times=stream_times,
         total_io_bytes=float(state.io_bytes),
         total_loads=int(state.loads),
         sim_time=t_end,
-        steps=int(state.steps),
+        steps=steps,
         wall_s=sim_wall,
-        extras={
-            "truncated": unfinished > 0,
-            "unfinished_streams": unfinished,
-            "churn_loads": int(state.churn),
-            "demand_loads": int(state.loads_demand),
-        },
+        extras=extras,
     )
 
 
@@ -1047,14 +1436,15 @@ def run_workload_array(
     max_time: float = 3e5,
     spec: Optional[SimSpec] = None,
     runner=None,
+    stepper: str = "fixed",
 ) -> ArrayResult:
     """Array-backend counterpart of ``repro.core.run_workload`` for every
     registered array policy (lru / pbm / cscan / opt).  Accepts any
     workload the compiler can lower — multi-table streams included.
+    ``stepper`` selects the time engine (see :func:`make_runner`) when no
+    pre-built ``runner`` is passed.
     Check ``result.extras["truncated"]`` when lowering ``max_time``: a run
     cut short by the livelock guard reports lower bounds, not results."""
-    import time
-
     from .compiler import compile_workload
 
     if spec is None:
@@ -1063,9 +1453,10 @@ def run_workload_array(
         runner = make_runner(spec, bandwidth_ref=bandwidth,
                              time_slice=time_slice,
                              prefetch_pages=prefetch_pages,
-                             policies=(policy_name,))
+                             policies=(policy_name,), stepper=stepper)
     cfg = make_config(spec, capacity_bytes, bandwidth, policy_name,
                       max_time=max_time)
-    t0 = time.time()
+    t0 = _time.time()
     state = jax.block_until_ready(runner(cfg))
-    return result_from_state(state, policy_name, sim_wall=time.time() - t0)
+    return result_from_state(state, policy_name, sim_wall=_time.time() - t0,
+                             dt_ref=getattr(runner, "dt_ref", None))

@@ -87,6 +87,13 @@ class SimSpec(NamedTuple):
     chunk_first: Optional[np.ndarray] = None  # f32 (CH,) table-local tuples
     chunk_last: Optional[np.ndarray] = None   # f32 (CH,) exclusive
     chunk_table: Optional[np.ndarray] = None  # i32 (CH,) owning table
+    # ---- per-column trigger geometry (compiler.py, horizon stepper) ------
+    # Fastest CPU rate of any query that actually scans each column.  The
+    # event-horizon stepper sizes its trigger window for macro-steps of
+    # up to ~h_max fine steps; bounding the crossing count with the
+    # per-column rate (instead of the global max rate) keeps the window
+    # from exploding on dense columns only slow scans ever touch.
+    col_max_rate: Optional[np.ndarray] = None  # f32 (C,)
 
     @property
     def nb(self) -> int:
@@ -108,7 +115,7 @@ class SimSpec(NamedTuple):
         """Fewest tuples per page of any column — the densest page grid."""
         return float(np.min(self.col_tpp))
 
-    def trigger_window(self, dt: float) -> int:
+    def trigger_window(self, dt: float, tight: bool = False) -> int:
         """Static per-column page-trigger lookahead for one step of length
         ``dt``: the most page boundaries the fastest scan can cross in the
         densest column, plus one so the conservative advance cap
@@ -119,9 +126,18 @@ class SimSpec(NamedTuple):
         column) has a dense tuple grid but nothing beyond its last page,
         so it must not inflate the global window the way a naive
         ``max_rate / min_tpp`` bound would in a multi-table spec.
+
+        ``tight`` additionally bounds each column by the fastest rate of
+        a query that actually scans it (``col_max_rate``, compiled per
+        column) — still sufficient (no scan of the column is faster),
+        but much smaller for the long macro-steps of the event-horizon
+        stepper when the densest columns belong to slow scans only.
         """
+        rate = self.max_rate
+        if tight and self.col_max_rate is not None:
+            rate = np.maximum(self.col_max_rate, 1.0)
         need = np.ceil(
-            1.1 * self.max_rate * float(dt) / self.col_tpp
+            1.1 * rate * float(dt) / self.col_tpp
         ).astype(np.int64) + 1
         need = np.minimum(need, self.col_npages.astype(np.int64) + 1)
         return max(1, int(np.max(need)))

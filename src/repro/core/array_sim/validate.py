@@ -1,10 +1,14 @@
 """Cross-validation harness: array backend vs the discrete-event engine.
 
 Runs the same workloads through both simulators and reports, per
-(workload, buffer point, policy), the relative error of the two paper
-metrics (average stream time and total I/O volume).  Every registered
-array policy validates here — the paper's full four-way comparison
-(lru / cscan / pbm / opt) on both suites:
+(workload, buffer point, policy, stepper), the relative error of the two
+paper metrics (average stream time and total I/O volume).  Every
+registered array policy validates here — the paper's full four-way
+comparison (lru / cscan / pbm / opt) on both suites — and BOTH time
+engines (``--stepper both``, the default): the fixed-dt cadence and the
+event-horizon stepper must each sit inside the same bars.  The slow
+event-engine reference runs are computed once per point and shared
+between steppers:
 
 * **micro** — the scaled §4.1 microbenchmark (single table, the
   original envelope of PR 1/2);
@@ -134,35 +138,47 @@ def _compare_point(
     time_slice: float,
     sample_interval: float,
     workload: str,
+    stepper: str = "fixed",
 ) -> List[Dict]:
     """One (buffer point) comparison, both backends, one row per policy —
     the single harness behind the micro AND TPC-H suites.
 
+    ``stepper`` selects the array time engine (fixed | horizon); the
+    event-engine reference runs are cached in ``shared`` so validating
+    both steppers pays for the slow dict engine once.
+
     Raises ``RuntimeError`` if the array run was truncated by the livelock
     guard — a truncated run reports lower bounds, not results.
     """
-    db, ws, streams, spec, runners = shared
+    db, ws, streams, spec, runners = shared[:5]
+    ev_cache = shared[5] if len(shared) > 5 else {}
     cap = max(1 << 22, int(buffer_frac * ws))
     rows: List[Dict] = []
     for pol in policies:
-        cfg = EngineConfig(bandwidth=bandwidth, buffer_bytes=cap,
-                           sample_interval=sample_interval,
-                           pbm_time_slice=time_slice)
-        t0 = time.time()
-        ev = run_workload(db, streams, pol, cfg)
-        ev_wall = time.time() - t0
-        if pol not in runners:
-            runners[pol] = make_runner(spec, bandwidth_ref=bandwidth,
-                                       time_slice=time_slice,
-                                       policies=(pol,))
+        ev_key = (pol, buffer_frac, bandwidth)
+        if ev_key not in ev_cache:
+            cfg = EngineConfig(bandwidth=bandwidth, buffer_bytes=cap,
+                               sample_interval=sample_interval,
+                               pbm_time_slice=time_slice)
+            t0 = time.time()
+            ev_cache[ev_key] = (run_workload(db, streams, pol, cfg),
+                                time.time() - t0)
+        ev, ev_wall = ev_cache[ev_key]
+        if (pol, stepper) not in runners:
+            runners[(pol, stepper)] = make_runner(
+                spec, bandwidth_ref=bandwidth, time_slice=time_slice,
+                policies=(pol,), stepper=stepper,
+            )
         ar = run_workload_array(
             db, streams, pol, capacity_bytes=cap, bandwidth=bandwidth,
-            time_slice=time_slice, spec=spec, runner=runners[pol],
+            time_slice=time_slice, spec=spec,
+            runner=runners[(pol, stepper)],
         )
         if ar.extras.get("truncated"):
             raise RuntimeError(
                 f"array run truncated by the livelock guard at {workload} "
                 f"buffer_frac={buffer_frac} policy={pol} "
+                f"stepper={stepper} "
                 f"({ar.extras['unfinished_streams']} unfinished streams "
                 f"after {ar.sim_time:.1f}s sim time) — refusing to compare "
                 "a lower bound against a finished event run"
@@ -170,6 +186,7 @@ def _compare_point(
         rows.append({
             "workload": workload,
             "policy": pol,
+            "stepper": stepper,
             "buffer_frac": buffer_frac,
             "event_stream_time_s": round(ev.avg_stream_time, 4),
             "array_stream_time_s": round(ar.avg_stream_time, 4),
@@ -181,6 +198,8 @@ def _compare_point(
             "event_wall_s": round(ev_wall, 3),
             "array_wall_s": round(ar.wall_s, 3),
             "array_steps": ar.steps,
+            "array_macro_steps": ar.extras.get("macro_steps", ar.steps),
+            "array_skipped_time": ar.extras.get("skipped_time", 0.0),
             "truncated": ar.extras.get("truncated", False),
             "array_churn_loads": ar.extras.get("churn_loads", 0),
         })
@@ -196,6 +215,7 @@ def cross_validate(
     bandwidth: float = 700e6,
     policies: Sequence[str] = DEFAULT_POLICIES,
     time_slice: Optional[float] = None,
+    stepper: str = "fixed",
     _shared=None,
 ) -> List[Dict]:
     """Run event + array backends on one microbenchmark point; return one
@@ -208,30 +228,36 @@ def cross_validate(
         streams = micro_streams(db, n_streams=n_streams,
                                 queries_per_stream=queries_per_stream,
                                 seed=seed)
-        _shared = (db, ws, streams, build_spec(db, streams), {})
+        _shared = (db, ws, streams, build_spec(db, streams), {}, {})
     return _compare_point(_shared, policies, buffer_frac, bandwidth,
-                          time_slice, sample_interval=2.0, workload="micro")
+                          time_slice, sample_interval=2.0, workload="micro",
+                          stepper=stepper)
 
 
 def cross_validate_sweep(
     fracs: Sequence[float] = DEFAULT_FRACS,
     scale: float = 0.25,
+    steppers: Sequence[str] = ("fixed",),
     **kw,
 ) -> List[Dict]:
-    """:func:`cross_validate` over several buffer points, reusing the
-    workload, spec, and compiled runners across points (capacity is a
-    traced config scalar, so one runner serves the whole sweep)."""
+    """:func:`cross_validate` over several buffer points (and optionally
+    both time engines), reusing the workload, spec, compiled runners AND
+    the slow event-engine reference runs across points — capacity is a
+    traced config scalar, so one runner serves the whole sweep, and the
+    dict engine runs once per point however many steppers validate."""
     db = make_lineitem_db(scale_tuples=int(180_000_000 * scale))
     ws = micro_accessed_bytes(db)
     streams = micro_streams(db, n_streams=kw.get("n_streams", 8),
                             queries_per_stream=kw.get("queries_per_stream", 16),
                             seed=kw.get("seed", 3))
     spec = build_spec(db, streams)
-    shared = (db, ws, streams, spec, {})
+    shared = (db, ws, streams, spec, {}, {})
     rows: List[Dict] = []
     for f in fracs:
-        rows.extend(cross_validate(scale=scale, buffer_frac=f,
-                                   _shared=shared, **kw))
+        for stepper in steppers:
+            rows.extend(cross_validate(scale=scale, buffer_frac=f,
+                                       stepper=stepper, _shared=shared,
+                                       **kw))
     return rows
 
 
@@ -243,6 +269,7 @@ def cross_validate_tpch(
     bandwidth: float = 600e6,
     policies: Sequence[str] = DEFAULT_POLICIES,
     time_slice: Optional[float] = None,
+    stepper: str = "fixed",
     _shared=None,
 ) -> List[Dict]:
     """TPC-H cross-validation point: the §4.2 multi-table workload (8
@@ -256,21 +283,24 @@ def cross_validate_tpch(
         db = make_tpch_db(scale=scale)
         streams = tpch_streams(db, n_streams=n_streams, seed=seed)
         ws = tpch_accessed_bytes(db, streams)
-        _shared = (db, ws, streams, compile_workload(db, streams), {})
+        _shared = (db, ws, streams, compile_workload(db, streams), {}, {})
     return _compare_point(_shared, policies, buffer_frac, bandwidth,
-                          time_slice, sample_interval=5.0, workload="tpch")
+                          time_slice, sample_interval=5.0, workload="tpch",
+                          stepper=stepper)
 
 
 def cross_validate_tpch_sweep(
     fracs: Optional[Sequence[float]] = None,
     scale: float = 0.05,
+    steppers: Sequence[str] = ("fixed",),
     **kw,
 ) -> List[Dict]:
     """:func:`cross_validate_tpch` over the enforced TPC-H buffer points
     (default: every frac in ``TPCH_ERROR_BARS``), reusing the workload,
-    compiled spec, and runners across points — so the CLI and the
-    ``refit-error-bars`` job measure the whole envelope, including the
-    widened 0.5 LRU bar, not just the default operating point."""
+    compiled spec, runners, and event-engine reference runs across points
+    (and steppers) — so the CLI and the ``refit-error-bars`` job measure
+    the whole envelope, including the widened 0.5 LRU bar, not just the
+    default operating point."""
     if fracs is None:
         fracs = sorted({f for (f, _pol) in TPCH_ERROR_BARS})
     db = make_tpch_db(scale=scale)
@@ -278,11 +308,13 @@ def cross_validate_tpch_sweep(
                            seed=kw.get("seed", 7))
     ws = tpch_accessed_bytes(db, streams)
     spec = compile_workload(db, streams)
-    shared = (db, ws, streams, spec, {})
+    shared = (db, ws, streams, spec, {}, {})
     rows: List[Dict] = []
     for f in fracs:
-        rows.extend(cross_validate_tpch(scale=scale, buffer_frac=f,
-                                        _shared=shared, **kw))
+        for stepper in steppers:
+            rows.extend(cross_validate_tpch(scale=scale, buffer_frac=f,
+                                            stepper=stepper,
+                                            _shared=shared, **kw))
     return rows
 
 
@@ -297,7 +329,11 @@ def fit_bars_literal(rows: List[Dict]) -> str:
         wl = r.get("workload", "micro")
         worst = max(abs(r["stream_time_rel_err"]), abs(r["io_rel_err"]))
         bar = max(0.10, math.ceil(worst * 1.25 * 100) / 100)
-        per_wl.setdefault(wl, {})[(r["buffer_frac"], r["policy"])] = bar
+        key = (r["buffer_frac"], r["policy"])
+        wl_bars = per_wl.setdefault(wl, {})
+        # one bar per point covering EVERY validated stepper (the fixed
+        # and horizon rows of one point fold into the max)
+        wl_bars[key] = max(bar, wl_bars.get(key, 0.0))
     names = {"micro": "ERROR_BARS", "tpch": "TPCH_ERROR_BARS"}
     out = ["# fitted bars (measured worst error x1.25, >= 10%) — paste "
            "into validate.py:"]
@@ -326,6 +362,7 @@ def _print_rows(rows: List[Dict], enforce: bool = True) -> int:
             verdict = f"measured {worst:.1%} (current bar {bar:.0%})"
         print(
             f"{wl:5s} buf={r['buffer_frac']:<4} {r['policy']:4s} "
+            f"[{r.get('stepper', 'fixed'):7s}] "
             f"stream_time: event={r['event_stream_time_s']:.2f}s "
             f"array={r['array_stream_time_s']:.2f}s "
             f"({r['stream_time_rel_err']*100:+.1f}%) | io: "
@@ -359,7 +396,15 @@ def main() -> None:
                     help="report measured errors without enforcing the "
                          "bars — the CI refit job runs this at full scale "
                          "to recalibrate ERROR_BARS / TPCH_ERROR_BARS")
+    ap.add_argument("--stepper", choices=["fixed", "horizon", "both"],
+                    default="both",
+                    help="array time engine(s) to validate; the bars are "
+                         "enforced for BOTH by default (the event-engine "
+                         "reference runs are shared, so the second "
+                         "stepper costs only its array runs)")
     args = ap.parse_args()
+    steppers = ("fixed", "horizon") if args.stepper == "both" \
+        else (args.stepper,)
     rows: List[Dict] = []
     if args.workload in ("micro", "all"):
         fracs = [args.buffer_frac] if args.buffer_frac is not None else \
@@ -367,6 +412,7 @@ def main() -> None:
         rows.extend(cross_validate_sweep(
             fracs=fracs, scale=args.scale, n_streams=args.streams,
             queries_per_stream=args.queries, seed=args.seed,
+            steppers=steppers,
         ))
     if args.workload in ("tpch", "all"):
         tpch_fracs = [args.tpch_buffer_frac] \
@@ -376,6 +422,7 @@ def main() -> None:
             n_streams=args.tpch_streams,
             bandwidth=TPCH_DEFAULTS["bandwidth"],
             seed=TPCH_DEFAULTS["seed"],
+            steppers=steppers,
         ))
     failed = _print_rows(rows, enforce=not args.fit_bars)
     if args.fit_bars:

@@ -24,7 +24,7 @@ from .flash_attention import flash_attention_kernel
 from .mamba2_scan import mamba2_scan_kernel
 from .mlstm import mlstm_chunked_kernel
 from .paged_attention import paged_attention_kernel
-from .pbm_timeline import batched_evict_kernel
+from .pbm_timeline import batched_evict_kernel, fifo_grant_kernel
 
 _BACKEND = "auto"
 
@@ -84,6 +84,24 @@ def mamba2_scan(xh, a, b, c, chunk: int = 128):
         return mamba2_scan_kernel(xh, a, b, c, chunk=chunk, interpret=True)
     y, _ = ref.mamba2_scan_ref(xh, a, b, c)
     return y
+
+
+def fifo_grant(key, sizes, budget, pops, *, vmax: int = 16):
+    """Budgeted FIFO grant over the request-queue key array (the array
+    sim's serial I/O server pop, macro-step sized).
+
+    The service order is fully encoded in ``key`` (stamp-FIFO with
+    policy-provided cohort ties, -1 = not wanted); strict head-of-line
+    admission against ``budget`` bytes and ``pops`` pops.  Called from
+    inside the already-jitted event-horizon step, so no jit wrapper;
+    backend policy picks the Mosaic kernel on TPU and the jnp oracle
+    (one ``top_k`` + prefix product) elsewhere."""
+    mode = _use_pallas()
+    if mode is not False:
+        return fifo_grant_kernel(
+            key, sizes, budget, pops, vmax=vmax, interpret=(mode is None),
+        )
+    return ref.fifo_grant_ref(key, sizes, budget, pops, vmax=vmax)
 
 
 def batched_evict(key, sizes, evictable, need_free, *, vmax: int = 64):

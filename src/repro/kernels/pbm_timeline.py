@@ -73,6 +73,81 @@ def _kernel(fscal_ref, key_ref, sizes_ref, evictable_ref, evict_out_ref,
     evict_out_ref[:] = take.astype(jnp.float32)
 
 
+def _grant_kernel(iscal_ref, fscal_ref, key_ref, sizes_ref, grant_out_ref,
+                  *, vmax: int):
+    pops = iscal_ref[0, 0]
+    budget = fscal_ref[0, 0]
+
+    key = key_ref[:]                  # (1, P) i32 — the FIFO keys use up
+    wanted = key >= 0                 # to ~30 bits (stamp*32768 + tie), so
+                                      # an f32 cast would round away the
+                                      # tie bits beyond 2^24
+    P = key.shape[-1]
+
+    # ---- budgeted FIFO pop via prefix bytes on the MXU -------------------
+    # service order: descending key, ties by ascending index — the same
+    # prefix trick as the eviction kernel, but with STRICT head-of-line
+    # admission: a predecessor that does not fit (or falls beyond the
+    # pops cap) blocks every later pop, like the engine's serial server.
+    key_p = key.reshape(P, 1)
+    key_q = key                       # (1, P)
+    iq = jax.lax.broadcasted_iota(jnp.int32, (P, P), 1)
+    ip = jax.lax.broadcasted_iota(jnp.int32, (P, P), 0)
+    before = ((key_q > key_p) | ((key_q == key_p) & (iq < ip))) & (key_q >= 0)
+    sz = (sizes_ref[:] * wanted).reshape(P, 1)
+    bytes_before = jnp.dot(
+        before.astype(jnp.float32), sz, preferred_element_type=jnp.float32
+    ).reshape(1, P)
+    rank = jnp.sum(before, axis=1).reshape(1, P)
+    fits = (
+        wanted
+        & (bytes_before + sizes_ref[:] <= budget)
+        & (rank < jnp.minimum(pops, vmax))
+    )
+    # strict prefix: drop any page with a non-fitting wanted predecessor
+    blocked = jnp.dot(
+        before.astype(jnp.float32),
+        (wanted & ~fits).astype(jnp.float32).reshape(P, 1),
+        preferred_element_type=jnp.float32,
+    ).reshape(1, P)
+    grant_out_ref[:] = (fits & (blocked == 0)).astype(jnp.float32)
+
+
+def fifo_grant_kernel(
+    key: jax.Array,          # (P,) i32 queue priority (-1 = not wanted)
+    sizes: jax.Array,        # (P,) f32
+    budget: jax.Array,       # () f32
+    pops: jax.Array,         # () i32
+    *,
+    vmax: int = 16,
+    interpret: bool = False,
+):
+    """Budgeted FIFO grant selection (the array sim's I/O server pop) as
+    one MXU prefix computation.  Returns ``(grant_mask, granted_bytes,
+    n_granted)``; semantics defined by ``ref.fifo_grant_ref`` (tests
+    assert exact agreement in interpret mode)."""
+    P = key.shape[0]
+    iscal = jnp.asarray(pops, jnp.int32).reshape(1, 1)
+    fscal = jnp.asarray(budget, jnp.float32).reshape(1, 1)
+    smem = pl.BlockSpec(memory_space=pltpu.SMEM)
+    vmem = pl.BlockSpec(memory_space=pltpu.VMEM)
+    grant = pl.pallas_call(
+        functools.partial(_grant_kernel, vmax=min(vmax, P)),
+        out_shape=jax.ShapeDtypeStruct((1, P), jnp.float32),
+        in_specs=[smem, smem, vmem, vmem],
+        out_specs=vmem,
+        interpret=interpret,
+    )(
+        iscal,
+        fscal,
+        key.reshape(1, P).astype(jnp.int32),
+        sizes.reshape(1, P).astype(jnp.float32),
+    )
+    mask = grant.reshape(P) > 0
+    granted = jnp.where(mask, sizes, 0.0)
+    return mask, jnp.sum(granted), jnp.sum(mask)
+
+
 def batched_evict_kernel(
     key: jax.Array,          # (P,) f32 policy score (higher = evict first)
     sizes: jax.Array,        # (P,) f32

@@ -127,6 +127,40 @@ def batched_evict_ref(
     return jnp.zeros((P,), bool).at[cand].set(take)
 
 
+def fifo_grant_ref(
+    key: jax.Array,        # (P,) i32 queue priority (-1 = not wanted)
+    sizes: jax.Array,      # (P,) f32 page bytes
+    budget: jax.Array,     # () f32 byte budget of this grant
+    pops: jax.Array,       # () i32 max queue pops (serial-server cap)
+    *,
+    vmax: int = 16,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the budgeted FIFO-grant kernel (array-sim I/O server).
+
+    Pops the request queue in descending ``key`` order (ties by ascending
+    page index — the stamp-FIFO service order the array sim encodes into
+    ``key``) with STRICT head-of-line semantics: the first page that does
+    not fit in ``budget``, is beyond the ``pops`` cap, or is not wanted
+    (``key < 0``) blocks everything behind it — exactly the event
+    engine's serial server.  At most the ``vmax`` highest-priority
+    entries are considered per call (a macro-step stands in for a few
+    fine steps, never a full queue drain).
+
+    Returns ``(grant_mask, granted_bytes, n_granted)``.
+    """
+    P = key.shape[0]
+    kv, cand = jax.lax.top_k(key, min(vmax, P))  # ties -> ascending index
+    sz = sizes[cand]
+    csum = jnp.cumsum(sz)
+    n = kv.shape[0]
+    ok = jnp.cumprod(
+        ((kv >= 0) & (csum <= budget)
+         & (jnp.arange(n) < pops)).astype(jnp.int32)
+    ).astype(bool)
+    mask = jnp.zeros((P,), bool).at[cand].set(ok)
+    return mask, jnp.sum(jnp.where(ok, sz, 0.0)), jnp.sum(ok)
+
+
 def gla_ref(
     q: jax.Array,    # (B, T, H, K)
     k: jax.Array,

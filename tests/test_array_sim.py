@@ -45,15 +45,26 @@ def test_cross_validation_scaled_microbenchmark():
     """Acceptance: every registered array policy within its validated
     error bar of the event engine on the scaled microbenchmark default
     operating point (quick-pass scale, buffer = 40% of working set,
-    700 MB/s, 8 streams) — the full four-policy paper comparison."""
+    700 MB/s, 8 streams) — the full four-policy paper comparison, on
+    BOTH time engines (the slow event-engine reference runs are shared
+    between the fixed and event-horizon steppers via the cache in
+    ``_shared``)."""
+    from repro.core.workload import make_lineitem_db as _mk
+    from repro.core.array_sim.spec import build_spec as _bs
     from repro.core.array_sim.validate import ERROR_BARS
 
-    rows = cross_validate(scale=0.25, buffer_frac=0.4)
-    assert {r["policy"] for r in rows} == {"lru", "cscan", "pbm", "opt"}
-    for r in rows:
-        bar = ERROR_BARS[(0.4, r["policy"])]
-        assert abs(r["stream_time_rel_err"]) <= bar, r
-        assert abs(r["io_rel_err"]) <= bar, r
+    db = _mk(scale_tuples=int(180_000_000 * 0.25))
+    ws = micro_accessed_bytes(db)
+    streams = micro_streams(db, n_streams=8, queries_per_stream=16, seed=3)
+    shared = (db, ws, streams, _bs(db, streams), {}, {})
+    for stepper in ("fixed", "horizon"):
+        rows = cross_validate(scale=0.25, buffer_frac=0.4, stepper=stepper,
+                              _shared=shared)
+        assert {r["policy"] for r in rows} == {"lru", "cscan", "pbm", "opt"}
+        for r in rows:
+            bar = ERROR_BARS[(0.4, r["policy"])]
+            assert abs(r["stream_time_rel_err"]) <= bar, (stepper, r)
+            assert abs(r["io_rel_err"]) <= bar, (stepper, r)
 
 
 # ----------------------------------------------------------- vmap smoke ----

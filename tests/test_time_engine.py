@@ -1,0 +1,327 @@
+"""Event-horizon time engine: variable-dt macro-stepping, lane sharding,
+and the ``slices_done`` livelock-guard rename.
+
+The batched substrate now models time two ways (``make_runner(stepper=)``):
+the classic fixed-dt cadence and the event-horizon stepper, which jumps
+each lane to its next interesting time (trigger arrival, chunk
+completion, io-credit horizon, stream completion, slice refresh).  These
+tests pin the contracts the refactor introduced:
+
+* dt-invariance — coarse (``step_pages=2``) vs fine fixed-dt vs the
+  horizon stepper agree within the documented array-vs-array bars on the
+  micro and TPC-H smoke workloads;
+* frozen-lane invariance — a finished lane of a batched run is bit-equal
+  to the same config run solo (its state freezes while slow lanes
+  continue);
+* ``shard_map`` lane mode — a single-device mesh is bit-equal to plain
+  ``vmap``;
+* the horizon's work is observable (``steps`` / ``macro_steps`` /
+  ``skipped_time`` extras), not inferred;
+* ``SimState.time_passed`` (a slice count that was never a time) is now
+  ``slices_done`` with a deprecation alias, and truncated runs still
+  raise in ``cross_validate``;
+* the budgeted FIFO-grant kernel matches its jnp oracle exactly.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.scans import ScanSpec
+from repro.core.workload import (
+    Q6_COLUMNS,
+    make_lineitem_db,
+    make_tpch_db,
+    micro_accessed_bytes,
+    micro_streams,
+    tpch_accessed_bytes,
+    tpch_streams,
+)
+from repro.core.array_sim import (
+    ArrayCScan,
+    ArrayPolicy,
+    HorizonView,
+    SimState,
+    build_spec,
+    compile_workload,
+    make_config,
+    make_runner,
+    result_from_state,
+    run_workload_array,
+    stack_configs,
+)
+
+#: array-vs-array agreement bar between time discretisations (the
+#: cross-backend bars live in validate.{ERROR_BARS,TPCH_ERROR_BARS};
+#: between two array discretisations of the SAME machine we hold the
+#: coarse/fine/horizon triangle to the same 12% envelope the validated
+#: points use)
+DT_INVARIANCE_BAR = 0.12
+
+
+def _micro_shared():
+    db = make_lineitem_db(scale_tuples=int(180_000_000 * 0.1))
+    ws = micro_accessed_bytes(db)
+    streams = micro_streams(db, n_streams=4, queries_per_stream=4, seed=3)
+    return db, ws, streams
+
+
+# ------------------------------------------------------ dt invariance -----
+
+def test_dt_invariance_micro_fixed_coarse_horizon():
+    """Coarse fixed (2-page steps), fine fixed, and the horizon stepper
+    are three discretisations of one machine: both paper metrics must
+    agree within the documented bar for LRU and PBM on the micro shape."""
+    db, ws, streams = _micro_shared()
+    spec = build_spec(db, streams)
+    for pol in ("lru", "pbm"):
+        runs = {}
+        for tag, kw in (
+            ("fine", dict(step_pages=1.0)),
+            ("coarse", dict(step_pages=2.0)),
+            ("horizon", dict(step_pages=1.0, stepper="horizon")),
+        ):
+            runner = make_runner(spec, bandwidth_ref=700e6, time_slice=0.01,
+                                 policies=(pol,), **kw)
+            runs[tag] = run_workload_array(
+                db, streams, pol, capacity_bytes=int(0.3 * ws),
+                bandwidth=700e6, time_slice=0.01, spec=spec, runner=runner,
+            )
+        ref = runs["fine"]
+        assert not ref.extras["truncated"]
+        for tag in ("coarse", "horizon"):
+            r = runs[tag]
+            assert not r.extras["truncated"], (pol, tag)
+            dt_st = r.avg_stream_time / ref.avg_stream_time - 1
+            dt_io = r.total_io_bytes / ref.total_io_bytes - 1
+            assert abs(dt_st) <= DT_INVARIANCE_BAR, (pol, tag, dt_st)
+            assert abs(dt_io) <= DT_INVARIANCE_BAR, (pol, tag, dt_io)
+
+
+def test_dt_invariance_tpch_smoke():
+    """Fixed vs horizon on the compiled multi-table TPC-H smoke workload
+    (all four registered policies ride the same spec)."""
+    db = make_tpch_db(scale=0.02)
+    streams = tpch_streams(db, n_streams=3, seed=7)
+    ws = tpch_accessed_bytes(db, streams)
+    spec = compile_workload(db, streams)
+    for pol in ("pbm", "cscan"):
+        rs = {}
+        for stepper in ("fixed", "horizon"):
+            runner = make_runner(spec, bandwidth_ref=600e6,
+                                 time_slice=0.002, policies=(pol,),
+                                 stepper=stepper)
+            rs[stepper] = run_workload_array(
+                db, streams, pol, capacity_bytes=max(1 << 22, int(0.3 * ws)),
+                bandwidth=600e6, time_slice=0.002, spec=spec, runner=runner,
+            )
+        dt_st = rs["horizon"].avg_stream_time / rs["fixed"].avg_stream_time - 1
+        dt_io = rs["horizon"].total_io_bytes / rs["fixed"].total_io_bytes - 1
+        assert abs(dt_st) <= DT_INVARIANCE_BAR, (pol, dt_st)
+        assert abs(dt_io) <= DT_INVARIANCE_BAR, (pol, dt_io)
+
+
+# ------------------------------------------------ frozen-lane freeze ------
+
+def test_frozen_lane_is_bit_stable_while_slow_lanes_continue():
+    """In a batched horizon run, a lane that finishes early freezes: its
+    final state must be BIT-equal to the same config run solo, however
+    long the slowest lane keeps stepping."""
+    db, ws, streams = _micro_shared()
+    spec = build_spec(db, streams)
+    runner = make_runner(spec, bandwidth_ref=700e6, time_slice=0.01,
+                         policies=("pbm",), stepper="horizon")
+    fast = make_config(spec, int(1.0 * ws), 700e6, "pbm")   # roomy: finishes
+    slow = make_config(spec, int(0.15 * ws), 700e6, "pbm")  # thrash: slow
+    states = jax.block_until_ready(
+        jax.jit(jax.vmap(runner))(stack_configs([fast, slow])))
+    solo = jax.block_until_ready(runner(fast))
+    fast_lane = jax.tree.map(lambda x: x[0], states)
+    assert float(fast_lane.t) > 0
+    # the slow lane really did keep going after the fast lane finished
+    assert int(states.steps[1]) > int(states.steps[0])
+    for name in ("t", "steps", "slices_done", "io_bytes", "loads",
+                 "churn", "stream_done_t", "pos", "consumed"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(fast_lane, name)),
+            np.asarray(getattr(solo, name)), err_msg=name)
+
+
+# ------------------------------------------------ shard_map lane mode -----
+
+def test_mesh_single_device_equivalence():
+    """``make_runner(mesh=...)`` over a one-device mesh must be bit-equal
+    to the plain vmapped runner — for both steppers (the acceptance
+    equivalence test of the shard_map lane mode)."""
+    from jax.sharding import Mesh
+
+    db, ws, streams = _micro_shared()
+    spec = build_spec(db, streams)
+    cfgs = stack_configs([
+        make_config(spec, int(f * ws), 700e6, "pbm") for f in (0.3, 0.6)
+    ])
+    mesh = Mesh(np.array(jax.devices()[:1]), ("lanes",))
+    for stepper in ("fixed", "horizon"):
+        plain = make_runner(spec, bandwidth_ref=700e6, time_slice=0.01,
+                            policies=("pbm",), stepper=stepper)
+        sharded = make_runner(spec, bandwidth_ref=700e6, time_slice=0.01,
+                              policies=("pbm",), stepper=stepper, mesh=mesh)
+        a = jax.block_until_ready(jax.jit(jax.vmap(plain))(cfgs))
+        b = jax.block_until_ready(sharded(cfgs))
+        np.testing.assert_array_equal(np.asarray(a.io_bytes),
+                                      np.asarray(b.io_bytes))
+        np.testing.assert_array_equal(np.asarray(a.stream_done_t),
+                                      np.asarray(b.stream_done_t))
+        np.testing.assert_array_equal(np.asarray(a.steps),
+                                      np.asarray(b.steps))
+
+
+def test_mesh_rejects_multi_axis():
+    from jax.sharding import Mesh
+
+    db, ws, streams = _micro_shared()
+    spec = build_spec(db, streams)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("a", "b"))
+    with pytest.raises(ValueError, match="one-axis"):
+        make_runner(spec, policies=("pbm",), mesh=mesh)
+
+
+# ------------------------------------------- observability + rename -------
+
+def test_horizon_reports_macro_steps_and_skipped_time():
+    """Speedups are observable, not inferred: extras carry the executed
+    step count and the simulated time the horizon jumped past."""
+    db, ws, streams = _micro_shared()
+    r_fix = run_workload_array(db, streams, "pbm",
+                               capacity_bytes=int(0.5 * ws),
+                               bandwidth=700e6, time_slice=0.01)
+    r_hor = run_workload_array(db, streams, "pbm",
+                               capacity_bytes=int(0.5 * ws),
+                               bandwidth=700e6, time_slice=0.01,
+                               stepper="horizon")
+    for r in (r_fix, r_hor):
+        assert r.extras["steps"] == r.steps
+        assert r.extras["macro_steps"] == r.steps
+        assert "skipped_time" in r.extras
+        assert r.extras["slices_done"] > 0
+    # the fixed cadence covers ~one fine step per step; the horizon
+    # stepper must actually have jumped on this roomy pool
+    assert r_fix.extras["skipped_time"] == pytest.approx(0.0, abs=1e-3)
+    assert r_hor.extras["skipped_time"] > 0.0
+    assert r_hor.steps < r_fix.steps
+
+
+def test_slices_done_rename_keeps_deprecated_alias():
+    """``SimState.time_passed`` counted PBM slices, never time; the field
+    is now ``slices_done`` and the old name warns but still reads."""
+    assert "slices_done" in SimState._fields
+    assert "time_passed" not in SimState._fields
+    db, ws, streams = _micro_shared()
+    spec = build_spec(db, streams)
+    from repro.core.array_sim.sim import init_state
+    st = init_state(spec, ())
+    import repro.core.array_sim.sim as sim_mod
+    sim_mod._warned.discard("time-passed")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert int(st.time_passed) == int(st.slices_done) == 0
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+
+def test_truncated_runs_still_raise_in_cross_validate(monkeypatch):
+    """The livelock guard compares ``slices_done`` (né ``time_passed``)
+    against ``max_slices``; a truncated array run must still abort
+    cross-validation instead of comparing a lower bound."""
+    from repro.core.array_sim import validate as v
+
+    real = v.run_workload_array
+
+    def forced_truncation(*args, **kw):
+        kw["max_time"] = 1e-3
+        return real(*args, **kw)
+
+    monkeypatch.setattr(v, "run_workload_array", forced_truncation)
+    with pytest.raises(RuntimeError, match="truncated by the livelock"):
+        v.cross_validate(scale=0.02, n_streams=2, queries_per_stream=2,
+                         buffer_frac=0.4, policies=("lru",))
+
+
+def test_max_slices_guard_truncates_on_slices_done():
+    """A tiny ``max_slices`` trips the guard via the renamed counter on
+    BOTH steppers."""
+    db = make_lineitem_db(scale_tuples=2_000_000)
+    spec_q = ScanSpec("lineitem", Q6_COLUMNS, ((0, 2_000_000),),
+                      tuple_rate=240e6)
+    spec = build_spec(db, [[spec_q]])
+    for stepper in ("fixed", "horizon"):
+        runner = make_runner(spec, bandwidth_ref=700e6, time_slice=0.005,
+                             policies=("lru",), max_slices=2,
+                             stepper=stepper)
+        st = jax.block_until_ready(
+            runner(make_config(spec, 64 << 20, 700e6, "lru")))
+        r = result_from_state(st, "lru")
+        assert r.extras["truncated"], stepper
+        assert int(st.slices_done) <= 2
+
+
+# ------------------------------------------- horizon-provider protocol ----
+
+def test_scan_horizon_protocol():
+    """Policies are horizon providers: the default is unconstrained
+    (``None``); the cooperative CScan reports per-stream chunk horizons."""
+    db = make_tpch_db(scale=0.02)
+    streams = tpch_streams(db, n_streams=3, seed=7)
+    spec = compile_workload(db, streams)
+    assert ArrayPolicy().scan_horizon((), None) is None
+    cs = ArrayCScan()
+    pstate = cs.init_state(spec)
+    hz = HorizonView(
+        spec=spec,
+        active=jnp.ones(spec.n_streams, bool),
+        start=jnp.zeros(spec.n_streams, jnp.float32),
+        end=jnp.full(spec.n_streams, 1e6, jnp.float32),
+        rate=jnp.full(spec.n_streams, 1e6, jnp.float32),
+        dt_ref=jnp.float32(1e-3),
+    )
+    t = cs.scan_horizon(pstate, hz)
+    assert t.shape == (spec.n_streams,)
+    # idle active scans need a fine step to run the pick loop
+    np.testing.assert_allclose(np.asarray(t), 1e-3)
+
+
+# ------------------------------------------------ fifo-grant kernel -------
+
+def test_fifo_grant_kernel_matches_reference_interpret():
+    """The budgeted FIFO-grant kernel (the horizon step's macro I/O pop)
+    must agree exactly with the top_k oracle: strict head-of-line
+    admission, pops cap, ties by page index, empty queues."""
+    from repro.kernels.pbm_timeline import fifo_grant_kernel
+    from repro.kernels.ref import fifo_grant_ref
+
+    rng = np.random.default_rng(11)
+    P = 128
+    for i in range(10):
+        if i % 3 == 0:
+            # stamp-FIFO shaped keys with a -1 tail — full 30-bit range:
+            # stamp_age*32768 + tie goes far past 2^24, where an f32
+            # cast would silently round the tie bits away
+            key = rng.integers(-1, (32767 << 15) + 32767, P)
+        elif i % 3 == 1:  # dense ties on old stamps (tie bits past 2^24)
+            key = (1 << 26) + rng.integers(-2, 4, P) * 3
+        else:             # nothing wanted
+            key = np.full(P, -1)
+        key = jnp.asarray(key, jnp.int32)
+        sizes = jnp.asarray(
+            rng.choice([524288.0, 262144.0, 4096.0], P), jnp.float32)
+        budget = jnp.float32(rng.choice([0.0, 5e5, 2e6, 1e7]))
+        pops = jnp.int32(rng.integers(0, 14))
+        mr, br, nr_ = fifo_grant_ref(key, sizes, budget, pops, vmax=12)
+        mk, bk, nk = fifo_grant_kernel(key, sizes, budget, pops, vmax=12,
+                                       interpret=True)
+        np.testing.assert_array_equal(np.asarray(mr), np.asarray(mk))
+        assert float(br) == float(bk)
+        assert int(nr_) == int(nk)
