@@ -153,12 +153,15 @@ def main() -> None:
     for r in srows:
         _csv(f"sharing_{r['workload']}", 0.0, r["reusable_fraction"])
 
-    print("# === serving KV-tier policies (framework) ===", file=sys.stderr)
-    vrows = [serving_bench.run_policy(p) for p in ("lru", "pbm", "belady")]
-    with open(os.path.join(RESULTS_DIR, "serving.json"), "w") as f:
+    print("# === serving KV-tier policies (registry) ===", file=sys.stderr)
+    # concurrent-load harness, policy list from the registry's serving
+    # capability; --smoke keeps the pool_pages axis only (the CI lane)
+    vrows = serving_bench.sweep(smoke=args.smoke)
+    with open(os.path.join(RESULTS_DIR, "serving_bench.json"), "w") as f:
         json.dump(vrows, f, indent=2)
     for r in vrows:
-        _csv(f"serve_{r['policy']}", r["steps"] * 1e6, r["swap_gb"])
+        _csv(f"serve_{r['sweep']}_{r['point']}_{r['policy']}",
+             r["p95_token_gap"] * 1e6, r["swap_gb"])
 
     print("# === data-pipeline cache (framework) ===", file=sys.stderr)
     drows = [data_bench.run_policy(p) for p in ("lru", "pbm", "opt")]

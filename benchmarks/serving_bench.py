@@ -1,25 +1,57 @@
-"""Serving-tier benchmark: KV page-pool policies under HBM oversubscription.
+"""Serving-tier benchmark: KV page-pool policies under concurrent decode load.
 
-The ML-side analogue of the paper's throughput run: many concurrent decode
-requests over an oversubscribed HBM page pool with a shared prompt prefix.
-Compares preemption/spill policies lru / pbm / belady on swap I/O volume
-and completion steps — the serving deployment of the paper's idea
-(DESIGN.md §2, integration 2).
+The ML-side analogue of the paper's throughput run (§4.2): a stream of
+decode requests arrives over time at an engine whose HBM page pool is
+oversubscribed, so some request's pages must spill to host.  Which pages
+leave, in what order preempted requests resume, and what gets prepared
+ahead is the buffer-management policy under test — resolved by NAME
+through ``repro.core.policy_registry``, the same table the event engine
+and the batched array simulator use (lru / cscan / pbm / opt).
+
+Reported per policy and operating point: p50/p95 **token latency** (engine
+steps between successive tokens of one request — the stall a user feels
+mid-stream), p50/p95 TTFT and completion latency, swap traffic, and
+completion throughput.  ``sweep()`` walks n_requests x pool_pages x
+prefix-share ratio around :data:`DEFAULT_POINT`; rows carry
+``sweep``/``point``/``policy`` keys so ``benchmarks/trend.py`` tracks them
+across CI runs (>20% p95 token-latency growth is flagged).
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import policy_registry
 from repro.serving import PagePool, Request, ServingEngine
 
+#: The documented operating point (EXPERIMENTS.md "serving"): pool holds
+#: ~60% of peak demand, half the requests share a system prompt, arrivals
+#: keep the batch saturated.  At this point PBM must strictly beat LRU on
+#: p95 token latency or swap volume, with OPT bounding both — asserted in
+#: tests/test_serving_policy.py.
+DEFAULT_POINT: Dict = dict(
+    n_requests=32, pool_pages=28, page_size=16, prefix_len=64,
+    share_ratio=0.5, max_batch=8, arrival_interval=1,
+    gen_lo=16, gen_hi=160, seed=1,
+)
 
-def run_policy(policy: str, *, n_requests=32, pool_pages=36, page_size=16,
-               prefix_len=64, max_batch=12, seed=1) -> Dict:
+
+def _pct(xs: List[float], q: float) -> float:
+    return float(np.percentile(xs, q)) if xs else 0.0
+
+
+def run_policy(policy: str, *, n_requests=32, pool_pages=28, page_size=16,
+               prefix_len=64, share_ratio=0.5, max_batch=8,
+               arrival_interval=2, gen_lo=16, gen_hi=160, seed=1,
+               sweep: str = "default", point: str = "default") -> Dict:
+    """One policy at one operating point under timed arrivals."""
+    # resolve through the registry FIRST: unknown or non-serving names die
+    # here with the registered list, not deep inside the engine
+    policy_registry.serving_policy(policy)
     pool = PagePool(
         n_pages=pool_pages, page_size=page_size,
         page_bytes=page_size * 2 * 8 * 128 * 2,   # tokens*kv*heads*dh*bf16
@@ -31,38 +63,94 @@ def run_policy(policy: str, *, n_requests=32, pool_pages=36, page_size=16,
     eng = ServingEngine(pool, step_fn, policy=policy, max_batch=max_batch)
     rng = np.random.default_rng(seed)
     common = list(range(prefix_len))  # shared system prompt
-    lengths = rng.integers(16, 160, n_requests)
+    lengths = rng.integers(gen_lo, gen_hi, n_requests)
+    shared = rng.random(n_requests) < share_ratio
+    plan: List[Request] = []
     for i in range(n_requests):
-        eng.submit(Request(
-            prompt=common + list(rng.integers(0, 100, 16)),
+        prefix = common if shared[i] else [1000 + i] * prefix_len
+        plan.append(Request(
+            prompt=prefix + list(rng.integers(0, 100, 16)),
             max_new_tokens=int(lengths[i]),
         ))
-    st = eng.run_to_completion(max_steps=20_000)
+    # timed arrivals: one request every arrival_interval steps — the
+    # engine runs WHILE load arrives instead of draining a pre-filled queue
+    due = 0
+    while len(eng.finished) < n_requests and eng.stats.steps < 50_000:
+        while due < n_requests and eng.stats.steps >= due * arrival_interval:
+            eng.submit(plan[due])
+            due += 1
+        eng.step()
+    st = eng.stats
+    done = eng.finished
+    ttft = [r.first_token_step - r.arrival_step for r in done]
+    completion = [r.done_step - r.arrival_step for r in done]
     return {
+        "sweep": sweep,
+        "point": point,
         "policy": policy,
         "steps": st.steps,
+        "completed": len(done),
         "tokens": st.tokens_generated,
-        "tokens_per_step": round(st.tokens_generated / max(1, st.steps), 2),
+        "tokens_per_step": round(st.tokens_generated / max(1, st.steps), 3),
+        "p50_token_gap": round(_pct(eng.token_gaps, 50), 2),
+        "p95_token_gap": round(_pct(eng.token_gaps, 95), 2),
+        "p50_ttft": round(_pct(ttft, 50), 1),
+        "p95_ttft": round(_pct(ttft, 95), 1),
+        "p50_completion": round(_pct(completion, 50), 1),
+        "p95_completion": round(_pct(completion, 95), 1),
         "preemptions": st.preemptions,
+        "resumes": st.resumes,
+        "prefetched_resumes": st.prefetched_resumes,
         "shared_prefix_pages": st.shared_prefix_pages,
         "swap_gb": round((st.swap_out_bytes + st.swap_in_bytes) / 1e9, 4),
     }
 
 
+#: sweep axes around DEFAULT_POINT (key -> values to substitute)
+SWEEP_AXES = {
+    "n_requests": (16, 32, 48),
+    "pool_pages": (24, 28, 40),
+    "share_ratio": (0.0, 0.5, 0.9),
+}
+
+
+def sweep(policies: Optional[List[str]] = None, smoke: bool = False
+          ) -> List[Dict]:
+    """n_requests x pool_pages x share_ratio sweep, one row per policy."""
+    if policies is None:
+        policies = policy_registry.names(backend="serving")
+    rows: List[Dict] = []
+    axes = {"pool_pages": SWEEP_AXES["pool_pages"]} if smoke else SWEEP_AXES
+    for axis, values in axes.items():
+        for v in values:
+            kw = dict(DEFAULT_POINT)
+            kw[axis] = v
+            for p in policies:
+                rows.append(run_policy(p, sweep=axis, point=str(v), **kw))
+    return rows
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    names = policy_registry.names(backend="serving")
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--policy", default=None,
+                    help=f"one registry policy (default: all of {names})")
     ap.add_argument("--out", default=None)
-    ap.add_argument("--requests", type=int, default=32)
-    ap.add_argument("--pool-pages", type=int, default=36)
+    ap.add_argument("--smoke", action="store_true",
+                    help="pool_pages axis only (CI lane)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="override n_requests on every point")
     args = ap.parse_args()
-    rows = [
-        run_policy(p, n_requests=args.requests, pool_pages=args.pool_pages)
-        for p in ("lru", "pbm", "belady")
-    ]
+    policies = [args.policy] if args.policy else names
+    if args.requests is not None:
+        DEFAULT_POINT["n_requests"] = args.requests
+    rows = sweep(policies, smoke=args.smoke)
     for r in rows:
-        print(f"  serve/{r['policy']:6s} steps={r['steps']:5d} "
-              f"tok/step={r['tokens_per_step']:5.2f} preempt={r['preemptions']:3d} "
-              f"swap={r['swap_gb']:.3f}GB shared={r['shared_prefix_pages']}")
+        print(f"  serve/{r['sweep']}={r['point']:>7s} {r['policy']:6s} "
+              f"p95gap={r['p95_token_gap']:6.2f} "
+              f"p95ttft={r['p95_ttft']:6.1f} "
+              f"tok/step={r['tokens_per_step']:5.2f} "
+              f"preempt={r['preemptions']:3d} swap={r['swap_gb']:.3f}GB")
     if args.out:
         with open(args.out, "w") as f:
             json.dump(rows, f, indent=2)

@@ -26,6 +26,11 @@ SWEEP_FILES = ("micro.json", "micro_array.json", "tpch.json",
 #: batched-race summary files (one dict each, see _race_section)
 RACE_FILES = ("batched_race.json", "tpch_race.json")
 
+#: serving-tier sweep rows (policy/sweep/point/p95_token_gap/swap_gb),
+#: written by benchmarks/serving_bench.py via benchmarks/run.py and the
+#: CI serving smoke lane
+SERVING_FILE = "serving_bench.json"
+
 
 def _load_rows(path: str) -> List[dict]:
     try:
@@ -107,6 +112,51 @@ def _race_section(prev_dir: str, cur_dir: str, fname: str) -> List[str]:
     return lines
 
 
+def _serving_section(prev_dir: str, cur_dir: str) -> List[str]:
+    """Serving-tier trend: p95 token latency and swap traffic per
+    (sweep, point, policy) from the concurrent-load harness.  A current
+    p95 token gap more than 20% above the previous run's is flagged as a
+    REGRESSION — the serving analogue of the races' wall-clock flag."""
+    cur = _index(_load_rows(os.path.join(cur_dir, SERVING_FILE)))
+    if not cur:
+        return []
+    prev = _index(_load_rows(os.path.join(prev_dir, SERVING_FILE)))
+    lines = [f"### {SERVING_FILE}", ""]
+    if not prev:
+        lines.append("_no baseline in previous artifact (first run?)_")
+        lines.append("")
+        return lines
+    lines.append("| sweep | point | policy | p95 token gap | Δ p95 | "
+                 "swap (GB) | Δ swap |")
+    lines.append("|---|---|---|---|---|---|---|")
+    regressions = []
+    for key in sorted(cur.keys(), key=str):
+        c = cur[key]
+        p = prev.get(key)
+        gap, swap = c.get("p95_token_gap"), c.get("swap_gb")
+        if p is None:
+            lines.append(f"| {key[0]} | {key[1]} | {key[2]} | {gap} | new | "
+                         f"{swap} | new |")
+            continue
+        pgap = p.get("p95_token_gap")
+        flag = ""
+        if isinstance(gap, (int, float)) and isinstance(pgap, (int, float)) \
+                and pgap > 0 and gap > 1.2 * pgap:
+            flag = " ⚠️ REGRESSION"
+            regressions.append(f"{key[0]}={key[1]}/{key[2]}")
+        lines.append(
+            f"| {key[0]} | {key[1]} | {key[2]} | {gap} | "
+            f"{_fmt_delta(gap, pgap)}{flag} | "
+            f"{swap} | {_fmt_delta(swap, p.get('swap_gb'))} |"
+        )
+    if regressions:
+        lines.append("")
+        lines.append(f"**⚠️ p95 token-latency regression >20% in "
+                     f"{SERVING_FILE}: {', '.join(regressions)}**")
+    lines.append("")
+    return lines
+
+
 def report(prev_dir: str, cur_dir: str) -> str:
     lines: List[str] = ["## Benchmark trend vs previous run", ""]
     any_table = False
@@ -147,6 +197,10 @@ def report(prev_dir: str, cur_dir: str) -> str:
         if race:
             any_table = True
             lines.extend(race)
+    serving = _serving_section(prev_dir, cur_dir)
+    if serving:
+        any_table = True
+        lines.extend(serving)
     if not any_table and len(lines) <= 2:
         lines.append("_no comparable sweep results found_")
     return "\n".join(lines)

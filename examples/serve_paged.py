@@ -45,7 +45,7 @@ def main():
     lm2 = PagedTinyLM(cfg, seed=0)
     pool2 = PagePool(n_pages=cfg.n_pages, page_size=cfg.page_size,
                      page_bytes=pool.page_bytes)
-    eng2 = ServingEngine(pool2, lm2.step_fn, policy="belady", max_batch=4)
+    eng2 = ServingEngine(pool2, lm2.step_fn, policy="opt", max_batch=4)
     rng = np.random.default_rng(0)
     system_prompt = list(rng.integers(0, cfg.vocab, 32))
     for i in range(6):

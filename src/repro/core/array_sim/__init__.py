@@ -32,7 +32,6 @@ importable without pulling in JAX.
 from .spec import SimSpec, build_spec
 from .compiler import compile_workload, referenced_tables
 from .sim import (
-    POLICY_IDS,
     ArrayResult,
     ArraySimConfig,
     SimState,
@@ -74,7 +73,6 @@ __all__ = [
     "ArrayResult",
     "ArraySimConfig",
     "HorizonView",
-    "POLICY_IDS",
     "SimSpec",
     "SimState",
     "StepCtx",

@@ -138,7 +138,7 @@ def target_buckets(eta, time_slice, n_groups, m, page_valid):
     return jnp.where(requested, b, nb).astype(jnp.int32)
 
 
-def shift_timeline(bucket, b_target, time_passed, k, *, nb, m):
+def shift_timeline(bucket, b_target, slices_done, k, *, nb, m):
     """``RefreshRequestedBuckets`` (paper Fig. 9/10): advance the bucketed
     timeline by ``k`` slices.  Per elapsed slice, bucket ``b`` (length
     ``2**(b//m)`` slices) moves left when the slice counter divides its
@@ -147,7 +147,7 @@ def shift_timeline(bucket, b_target, time_passed, k, *, nb, m):
     step of the paper."""
 
     def shift_once(i, b):
-        tp = time_passed + i + 1
+        tp = slices_done + i + 1
         blen = jnp.left_shift(jnp.int32(1), jnp.clip(b, 0, nb - 1) // m)
         req = (b >= 0) & (b < nb)
         moved = req & ((tp % blen) == 0)
@@ -178,17 +178,14 @@ class StepCtx:
                  page_valid, resident, last_used, load_mask, load_cand,
                  load_ok, cross_pidx, crossed, active, cols, cur, end,
                  start, eps, rate, speed_push, coop=None,
-                 slices_done=None, time_passed=None,
+                 slices_done=None,
                  upd_pages=None, upd_on=None):
         self.spec = spec
         self.refresh = refresh
         self.time_slice = time_slice
         self.now = now                  # f32 sim clock (end of this step)
         self.steps = steps
-        if slices_done is None:         # deprecated kwarg spelling
-            slices_done = time_passed
         self.slices_done = slices_done  # i32 PBM slices elapsed (pre-step)
-        self.time_passed = slices_done  # deprecated alias (it counts slices)
         self.dt = dt                    # step length: static under the fixed
                                         # stepper, traced under "horizon"
         self.page_first = page_first

@@ -70,7 +70,6 @@ registry's stable array id.
 from __future__ import annotations
 
 import time as _time
-import warnings
 from dataclasses import dataclass, field
 from typing import List, NamedTuple, Optional, Sequence, Tuple
 
@@ -130,9 +129,9 @@ class SimState(NamedTuple):
     steps: jax.Array          # i32 simulation steps executed (macro steps
                               #   under the horizon stepper)
     slices_done: jax.Array    # i32 PBM slices elapsed — the livelock guard
-                              #   compares THIS against max_slices (the old
-                              #   name ``time_passed`` miscounted: it was
-                              #   always a slice count, never a time)
+                              #   compares THIS against max_slices (the
+                              #   pre-PR-5 name miscounted: it was always a
+                              #   slice count, never a time)
     io_credit: jax.Array      # f32 banked I/O bytes (partial in-flight load)
     io_bytes: jax.Array       # f32 lifetime loaded bytes (paper I/O volume)
     loads: jax.Array          # i32 lifetime page loads
@@ -140,15 +139,6 @@ class SimState(NamedTuple):
     churn: jax.Array          # i32 loads evicted before any consumption
     # ---- policy-private state (one pytree per compiled ArrayPolicy) ------
     pstate: Tuple = ()
-
-    @property
-    def time_passed(self) -> jax.Array:
-        """Deprecated alias of :attr:`slices_done` (the counter always
-        counted PBM slices, not time — the old name suggested otherwise)."""
-        _warn_once("time-passed",
-                   "SimState.time_passed is deprecated; it counts slices "
-                   "and is now named SimState.slices_done")
-        return self.slices_done
 
 
 @dataclass
@@ -171,20 +161,6 @@ class ArrayResult:
     @property
     def io_gb(self) -> float:
         return self.total_io_bytes / 1e9
-
-
-#: Deprecated alias: policy name -> stable array id.  The registry
-#: (``repro.core.policy_registry``) is the source of truth; this mapping
-#: is kept for existing callers and result JSONs.
-POLICY_IDS = policy_registry.array_ids()
-
-_warned = set()
-
-
-def _warn_once(key: str, msg: str) -> None:
-    if key not in _warned:
-        _warned.add(key)
-        warnings.warn(msg, DeprecationWarning, stacklevel=3)
 
 
 def resolve_policies(
@@ -250,25 +226,26 @@ def make_config(
     spec: SimSpec,
     capacity_bytes: float,
     bandwidth: float = 700e6,
-    policy: str | int = "pbm",
+    policy: str = "pbm",
     max_time: float = 3e5,
 ) -> ArraySimConfig:
-    """Build one traced config.  ``policy`` is a registry name; raw
-    integer ids are a deprecated shim (they still resolve — they ARE the
-    registry ids — but name strings are the contract)."""
-    if isinstance(policy, str):
-        entry = policy_registry.get(policy)
-        if entry.array_id is None:
-            raise KeyError(
-                f"policy {policy!r} is event-engine-only; array-backend "
-                f"policies: {policy_registry.names(backend='array')}"
-            )
-        pid = entry.array_id
-    else:
-        _warn_once("int-policy",
-                   "integer policy ids in make_config are deprecated; "
-                   "pass the registry name (e.g. policy='pbm')")
-        pid = int(policy)
+    """Build one traced config.  ``policy`` is a registry name — the one
+    name table in ``repro.core.policy_registry``; raw integer ids were a
+    pre-registry shim and are now a hard error."""
+    if not isinstance(policy, str):
+        raise TypeError(
+            f"make_config(policy={policy!r}): integer policy ids were "
+            "removed — pass a registry name from "
+            "repro.core.policy_registry.names(backend='array') "
+            f"({policy_registry.names(backend='array')})"
+        )
+    entry = policy_registry.get(policy)
+    if entry.array_id is None:
+        raise KeyError(
+            f"policy {policy!r} is event-engine-only; array-backend "
+            f"policies: {policy_registry.names(backend='array')}"
+        )
+    pid = entry.array_id
     return ArraySimConfig(
         capacity_bytes=jnp.float32(capacity_bytes),
         bandwidth=jnp.float32(bandwidth),
@@ -1269,8 +1246,8 @@ def make_runner(
     registered array policy, so one runner serves a whole four-policy
     sweep.  A single-name tuple specialises the compiled step for that
     policy (no stacked dispatch, no unused machinery) — the fast path for
-    per-policy validation runs.  ``static_policy`` is the deprecated
-    pre-registry spelling of that single-policy case.
+    per-policy validation runs.  The pre-registry ``static_policy``
+    spelling of that single-policy case was removed and now raises.
 
     vmap-ready: ``jax.vmap(make_runner(spec))`` over a stacked config runs
     a whole sweep axis in one call.  With ``mesh`` (a one-axis
@@ -1281,14 +1258,12 @@ def make_runner(
     intact; the lane count must divide the mesh size evenly.
     """
     if static_policy is not _UNSET:
-        _warn_once(
-            "static-policy",
-            "make_runner(static_policy=...) is deprecated; pass "
-            "policies=(name,) — resolved through repro.core."
-            "policy_registry (None still means every array policy)",
+        raise TypeError(
+            "make_runner(static_policy=...) was removed; pass "
+            "policies=(name,) — resolved through "
+            "repro.core.policy_registry (None still means every array "
+            "policy)"
         )
-        if static_policy is not None:
-            policies = (static_policy,)
     pols = resolve_policies(policies)
     dt = float(step_pages) * float(np.max(spec.page_size)) / float(bandwidth_ref)
     cheap = make_step(spec, dt, time_slice, prefetch_pages, refresh=False,

@@ -17,7 +17,7 @@ Pages are kept in a **bucketed timeline** rather than an exact priority queue
 * A trailing **not-requested** bucket holds resident pages no active scan
   wants; it is kept in LRU order (paper's PBM/LRU hybrid for that bucket).
 * Every ``time_slice`` the timeline shifts left one slice
-  (``RefreshRequestedBuckets``): a bucket moves when ``time_passed`` is
+  (``RefreshRequestedBuckets``): a bucket moves when ``slices_done`` is
   divisible by its length; a bucket shifted past position 0 is *spilled* —
   its pages get their priority recalculated and re-pushed (this is how
   stale speed estimates self-correct).
@@ -80,7 +80,7 @@ class PBMPolicy(Policy):
         self._meta: Dict[PageId, _PageMeta] = {}
         self._scans: Dict[int, "ScanState"] = {}
         self._scan_pages: Dict[int, List[Page]] = {}
-        self._time_passed = 0      # slices since attach
+        self._slices_done = 0      # slices since attach
         self._epoch = 0.0
 
     # ------------------------------------------------------------------ util
@@ -154,22 +154,22 @@ class PBMPolicy(Policy):
     def refresh_requested_buckets(self, now: float) -> None:
         """Shift the timeline left; recalc pages spilled past position 0."""
         target = int((now - self._epoch) / self.time_slice)
-        if target <= self._time_passed:
+        if target <= self._slices_done:
             return
-        steps = target - self._time_passed
+        steps = target - self._slices_done
         if steps > 2 * self.nb * (1 << (self.n_groups - 1)):
             # long idle period: rebuild instead of stepping
-            self._time_passed = target
+            self._slices_done = target
             for b in list(self.buckets):
                 for page in list(b.values()):
                     self.page_push(page, now)
             return
         for _ in range(steps):
-            self._time_passed += 1
+            self._slices_done += 1
             spill: List[Page] = []
             new: List[Optional["OrderedDict[PageId, Page]"]] = [None] * self.nb
             for i in range(self.nb):
-                moved = (self._time_passed % self._bucket_len_slices(i)) == 0
+                moved = (self._slices_done % self._bucket_len_slices(i)) == 0
                 dest = i - 1 if moved else i
                 if dest < 0:
                     spill.extend(self.buckets[i].values())

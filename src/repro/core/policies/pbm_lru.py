@@ -43,7 +43,7 @@ class PBMLRUPolicy(PBMPolicy):
         ]
         self._lru_pos: Dict[PageId, int] = {}
         self._history: Dict[PageId, Deque[float]] = {}
-        self._lru_time_passed = 0
+        self._lru_slices_done = 0
 
     # ---- history-based next-consumption estimate ---------------------------
     def _history_estimate(self, pid: PageId, now: float) -> Optional[float]:
@@ -91,14 +91,14 @@ class PBMLRUPolicy(PBMPolicy):
         super().on_consumed(scan, page, now)
 
     def refresh_requested_buckets(self, now: float) -> None:
-        before = self._time_passed
+        before = self._slices_done
         super().refresh_requested_buckets(now)
-        steps = self._time_passed - before
+        steps = self._slices_done - before
         # counter-rotation: age the LRU mirror to the *right*
         for _ in range(steps):
-            self._lru_time_passed += 1
+            self._lru_slices_done += 1
             for i in range(self.nb - 1, -1, -1):
-                if self._lru_time_passed % self._bucket_len_slices(i) != 0:
+                if self._lru_slices_done % self._bucket_len_slices(i) != 0:
                     continue
                 src = self.lru_buckets[i]
                 if not src:

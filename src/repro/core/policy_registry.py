@@ -1,8 +1,8 @@
-"""One policy registry for both simulation backends.
+"""One policy registry for every backend — simulators AND the serving path.
 
 Every buffer-management policy in the tree — the paper's four-way
 comparison (LRU, CScans' ABM, PBM, OPT) and the beyond-paper variants —
-is described by exactly one :class:`PolicyEntry` here.  Both backends
+is described by exactly one :class:`PolicyEntry` here.  Three backends
 resolve names through this table:
 
 * the **event engine** (``repro.core.engine.run_workload``) instantiates
@@ -11,7 +11,12 @@ resolve names through this table:
 * the **array backend** (``repro.core.array_sim``) instantiates
   ``entry.array_factory()``, an
   :class:`~repro.core.array_sim.policies.ArrayPolicy`, and encodes the
-  policy in traced configs as the stable integer ``entry.array_id``.
+  policy in traced configs as the stable integer ``entry.array_id``;
+* the **serving path** (``repro.serving``, the paged KV-cache) instantiates
+  ``entry.serving_factory()``, a
+  :class:`~repro.serving.policy_driver.ServingPolicy` the
+  ``ServingEngine``'s driver consults for eviction / spill / prefetch —
+  the decode schedule is the paper's "known future" on real traffic.
 
 Policies are *data*: benchmarks derive their policy lists from
 :func:`names` instead of hardcoded tuples, unknown names fail with the
@@ -32,7 +37,7 @@ from typing import Callable, Dict, List, Optional
 
 __all__ = [
     "PolicyEntry", "register", "get", "names", "event_policy",
-    "array_policy", "array_ids", "array_name",
+    "array_policy", "array_ids", "array_name", "serving_policy",
 ]
 
 
@@ -47,6 +52,9 @@ class PolicyEntry:
     the array-backend policy (``None`` for event-only entries).
     ``array_id`` is the stable integer the array backend carries in
     traced configs — part of the result-JSON contract, never reused.
+    ``serving_factory() -> ServingPolicy`` builds the paged-KV-cache
+    policy the serving engine's driver consults (``None`` for entries
+    with no serving realisation).
     """
 
     name: str
@@ -56,15 +64,19 @@ class PolicyEntry:
     event_factory: Optional[Callable[..., object]] = None
     array_factory: Optional[Callable[[], object]] = None
     array_id: Optional[int] = None
+    serving_factory: Optional[Callable[[], object]] = None
 
     @property
     def backends(self) -> tuple:
-        """Which backends can run this policy ("event", "array")."""
+        """Which backends can run this policy ("event", "array",
+        "serving")."""
         out = []
         if self.event_factory is not None or self.cooperative:
             out.append("event")
         if self.array_factory is not None:
             out.append("array")
+        if self.serving_factory is not None:
+            out.append("serving")
         return tuple(out)
 
 
@@ -77,7 +89,7 @@ def register(entry: PolicyEntry) -> PolicyEntry:
         raise ValueError(f"policy {entry.name!r} already registered")
     if not entry.backends:
         raise ValueError(
-            f"policy {entry.name!r} has neither an event nor an array "
+            f"policy {entry.name!r} has no event, array, or serving "
             "factory — register at least one backend"
         )
     if entry.array_id is not None:
@@ -113,8 +125,9 @@ def names(backend: Optional[str] = None, paper_only: bool = False,
           ) -> List[str]:
     """Registered policy names, in registration order.
 
-    ``backend="event"|"array"`` restricts to policies that backend can
-    run; ``paper_only`` restricts to the paper's four-way comparison.
+    ``backend="event"|"array"|"serving"`` restricts to policies that
+    backend can run; ``paper_only`` restricts to the paper's four-way
+    comparison.
     """
     out = []
     for e in _REGISTRY.values():
@@ -153,6 +166,18 @@ def array_policy(name: str):
             f"policies: {names(backend='array')}"
         )
     return e.array_factory()
+
+
+def serving_policy(name: str):
+    """Resolve ``name`` to a fresh ``ServingPolicy`` instance for the
+    paged-KV serving engine (imports ``repro.serving`` lazily)."""
+    e = get(name)
+    if e.serving_factory is None:
+        raise KeyError(
+            f"policy {name!r} has no serving realisation; serving-capable "
+            f"policies: {names(backend='serving')}"
+        )
+    return e.serving_factory()
 
 
 def array_ids() -> Dict[str, int]:
@@ -224,16 +249,38 @@ def _array_opt():
     return ArrayOPT()
 
 
+def _serving_lru():
+    from ..serving.policy_driver import ServingLRU
+    return ServingLRU()
+
+
+def _serving_pbm():
+    from ..serving.policy_driver import ServingPBM
+    return ServingPBM()
+
+
+def _serving_cscan():
+    from ..serving.policy_driver import ServingCScan
+    return ServingCScan()
+
+
+def _serving_opt():
+    from ..serving.policy_driver import ServingOPT
+    return ServingOPT()
+
+
 register(PolicyEntry(
     name="lru", summary="least-recently-used eviction (paper baseline)",
     paper=True, event_factory=_event_lru,
     array_factory=_array_lru, array_id=0,
+    serving_factory=_serving_lru,
 ))
 register(PolicyEntry(
     name="cscan",
     summary="Cooperative Scans: ABM chunk scheduling (paper §2)",
     paper=True, cooperative=True,
     array_factory=_array_cscan, array_id=2,
+    serving_factory=_serving_cscan,
 ))
 register(PolicyEntry(
     name="pbm",
@@ -241,12 +288,14 @@ register(PolicyEntry(
             "(paper §3)",
     paper=True, event_factory=_event_pbm,
     array_factory=_array_pbm, array_id=1,
+    serving_factory=_serving_pbm,
 ))
 register(PolicyEntry(
     name="opt",
     summary="Belady bound on exact next-consumption distances (paper §4)",
     paper=True, event_factory=_event_opt,
     array_factory=_array_opt, array_id=3,
+    serving_factory=_serving_opt,
 ))
 register(PolicyEntry(
     name="mru", summary="most-recently-used eviction (beyond-paper)",
@@ -264,9 +313,29 @@ register(PolicyEntry(
 ))
 
 
+def _check_serving(name: str) -> None:
+    """Drive the serving engine end to end under ``name``: resolve the
+    policy, run a tiny oversubscribed workload, and require every request
+    to complete — a serving capability flag that doesn't actually serve
+    is a registry lie."""
+    from ..serving import PagePool, Request, ServingEngine
+
+    pol = serving_policy(name)
+    assert pol.name == name, (pol.name, name)
+    eng = ServingEngine(
+        PagePool(n_pages=12, page_size=4, page_bytes=256),
+        lambda reqs: [0 for _ in reqs], policy=name, max_batch=3,
+    )
+    for _ in range(4):
+        eng.submit(Request(prompt=[1, 2, 3, 4, 5, 6], max_new_tokens=8))
+    eng.run_to_completion(max_steps=500)
+    assert len(eng.finished) == 4, f"{name}: {len(eng.finished)}/4 served"
+
+
 def _check(verbose: bool = True) -> int:
     """Registry completeness: every entry resolves on each backend it
-    declares (or is explicitly single-backend).  CI runs this."""
+    declares (or is explicitly single-backend).  The serving check runs a
+    real mini-workload through the ServingEngine.  CI runs this."""
     from .engine import EngineConfig
 
     cfg = EngineConfig()
@@ -274,7 +343,7 @@ def _check(verbose: bool = True) -> int:
     for name in names():
         e = get(name)
         marks = []
-        for backend in ("event", "array"):
+        for backend in ("event", "array", "serving"):
             if backend not in e.backends:
                 marks.append(f"{backend}-skip")
                 continue
@@ -282,15 +351,17 @@ def _check(verbose: bool = True) -> int:
                 if backend == "event":
                     pol, coop = event_policy(name, cfg)
                     assert coop or pol is not None
-                else:
+                elif backend == "array":
                     assert array_policy(name) is not None
+                else:
+                    _check_serving(name)
                 marks.append(f"{backend}-ok")
             except Exception as exc:  # noqa: BLE001
                 marks.append(f"{backend}-FAIL({exc})")
                 failures += 1
         if verbose:
             tag = "paper" if e.paper else "extra"
-            only = ("" if len(e.backends) == 2
+            only = ("" if len(e.backends) > 1
                     else f" [{e.backends[0]}-only]")
             print(f"  {name:8s} ({tag}){only}: {' '.join(marks)}")
     return failures
@@ -309,7 +380,8 @@ if __name__ == "__main__":
         print("policy registry OK:",
               f"{len(names())} policies,",
               f"event={names(backend='event')},",
-              f"array={names(backend='array')}")
+              f"array={names(backend='array')},",
+              f"serving={names(backend='serving')}")
     else:
         for nm in names():
             e = get(nm)

@@ -22,7 +22,9 @@ def main() -> None:
     ap.add_argument("--pool-pages", type=int, default=48)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=8)
-    ap.add_argument("--policy", choices=["lru", "pbm", "belady"], default="pbm")
+    from repro.core import policy_registry
+    ap.add_argument("--policy", default="pbm",
+                    choices=policy_registry.names(backend="serving"))
     ap.add_argument("--prefix-len", type=int, default=64)
     ap.add_argument("--real-model", action="store_true")
     ap.add_argument("--seed", type=int, default=0)

@@ -1,7 +1,12 @@
 from .kv_cache import PagePool, RequestKV, prefix_hash
 from .engine import EngineStats, Request, ServingEngine
+from .policy_driver import (
+    DecodeSchedule, PolicyDriver, ServingCScan, ServingLRU, ServingOPT,
+    ServingPBM, ServingPolicy,
+)
 
 __all__ = [
-    "EngineStats", "PagePool", "Request", "RequestKV", "ServingEngine",
-    "prefix_hash",
+    "DecodeSchedule", "EngineStats", "PagePool", "PolicyDriver", "Request",
+    "RequestKV", "ServingCScan", "ServingEngine", "ServingLRU", "ServingOPT",
+    "ServingPBM", "ServingPolicy", "prefix_hash",
 ]

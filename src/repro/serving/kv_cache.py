@@ -73,7 +73,12 @@ class PagePool:
             return
         m.ref_count -= 1
         if m.ref_count <= 0:
-            if m.prefix_hash is not None:
+            # two pages can carry the same prefix hash (a spilled prefix
+            # page's host copy plus a fresh HBM page allocated for the same
+            # prefix while it was away) — only the page the index actually
+            # points at may drop the entry
+            if m.prefix_hash is not None and \
+                    self.prefix_index.get(m.prefix_hash) == pid:
                 self.prefix_index.pop(m.prefix_hash, None)
             del self.meta[pid]
             if pid >= 0:  # host uids (< 0) are not HBM slots
@@ -119,7 +124,10 @@ class PagePool:
             m.page_id = slot
             self.meta[slot] = m
             if m.prefix_hash is not None:
-                self.prefix_index[m.prefix_hash] = slot
+                # a fresh page may have taken this prefix while the copy
+                # was on host — keep the established mapping, the returned
+                # copy serves only its own request
+                self.prefix_index.setdefault(m.prefix_hash, slot)
             mapping[uid] = slot
             self.swap_in_bytes += self.page_bytes
         return mapping

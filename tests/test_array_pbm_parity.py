@@ -30,7 +30,7 @@ def _pbm_key(spec, bucket, last_used, now):
     fields ``score_victims`` reads are populated)."""
     ctx = StepCtx(
         spec=spec, refresh=False, time_slice=jnp.float32(1.0),
-        now=jnp.float32(now), steps=None, time_passed=None, dt=None,
+        now=jnp.float32(now), steps=None, slices_done=None, dt=None,
         page_first=None, page_last=None, page_col=None, page_valid=None,
         resident=None, last_used=last_used, load_mask=None, load_cand=None,
         load_ok=None, cross_pidx=None, crossed=None, active=None,

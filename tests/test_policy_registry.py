@@ -1,12 +1,10 @@
-"""The policy registry: one policy surface for both engines.
+"""The policy registry: one policy surface for all three backends.
 
 Completeness (every registered name resolves on each backend it
 declares — the CI registry check), the stable array-id contract,
 helpful unknown-name errors, registry-derived benchmark policy lists,
-and the deprecation shims for the pre-registry kwargs.
+and the hard errors that replaced the pre-registry kwarg shims.
 """
-
-import warnings
 
 import pytest
 
@@ -38,13 +36,15 @@ def test_registry_completeness_every_name_resolves():
     assert policy_registry._check(verbose=False) == 0
 
 
-def test_paper_comparison_runs_on_both_backends():
-    """The paper's four-way comparison is fully array-capable — the
-    tentpole contract: no policy of Figs 9-16 is event-engine-only."""
+def test_paper_comparison_runs_on_all_backends():
+    """The paper's four-way comparison is fully capable on every
+    backend — event, array, AND the serving path: no policy of
+    Figs 9-16 is engine-only anywhere."""
     paper = policy_registry.names(paper_only=True)
     assert paper == ["lru", "cscan", "pbm", "opt"]
     for name in paper:
-        assert set(policy_registry.get(name).backends) == {"event", "array"}
+        assert set(policy_registry.get(name).backends) == {
+            "event", "array", "serving"}
 
 
 def test_array_ids_are_the_stable_contract():
@@ -113,36 +113,42 @@ def test_config_outside_compiled_policy_set_truncates_not_mislabels():
     assert not result_from_state(good, "lru").extras["truncated"]
 
 
-def test_deprecation_shims_route_through_registry():
-    """The pre-registry kwargs keep working: ``static_policy=`` on
-    make_runner and integer policy ids on make_config warn (once) and
-    resolve to the same registry policies."""
-    jax = pytest.importorskip("jax")  # noqa: F841
+def test_pre_registry_spellings_are_hard_errors():
+    """The deprecation shims are gone: ``static_policy=`` on make_runner
+    and integer policy ids on make_config raise TypeError with a pointer
+    at the registry surface — not a warning, not a silent reroute."""
+    pytest.importorskip("jax")
     from repro.core.pages import Database
     from repro.core.scans import ScanSpec
     from repro.core.array_sim import (
         build_spec, make_config, make_runner,
     )
 
-    from repro.core.array_sim import sim as sim_mod
-
     db = Database()
     db.add_table("t", 50_000, {"c": 2.0}, page_bytes=1 << 14)
     spec = build_spec(db, [[ScanSpec("t", ("c",), ((0, 50_000),))]])
-    sim_mod._warned.clear()   # warn-once state may be spent by earlier tests
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        runner = make_runner(spec, time_slice=0.01, static_policy="pbm")
-        cfg_int = make_config(spec, 1 << 20, policy=1)
-    msgs = " ".join(str(x.message) for x in w)
-    assert "static_policy" in msgs and "deprecated" in msgs
-    assert int(cfg_int.policy) == policy_registry.array_ids()["pbm"]
-    # ... and only once: the second use stays quiet
-    with warnings.catch_warnings(record=True) as w2:
-        warnings.simplefilter("always")
+    with pytest.raises(TypeError, match="policy_registry"):
         make_runner(spec, time_slice=0.01, static_policy="pbm")
-    assert not [x for x in w2 if "static_policy" in str(x.message)]
+    with pytest.raises(TypeError, match="policy_registry"):
+        make_runner(spec, time_slice=0.01, static_policy=None)
+    with pytest.raises(TypeError, match="registry name"):
+        make_config(spec, 1 << 20, policy=1)
+    # the registry spelling is the one that works
     cfg = make_config(spec, 1 << 20, policy="pbm")
-    assert int(cfg.policy) == int(cfg_int.policy)
-    state = jax.block_until_ready(runner(cfg))
-    assert float(state.io_bytes) > 0
+    assert int(cfg.policy) == policy_registry.array_ids()["pbm"]
+
+
+def test_serving_policy_resolves_through_registry():
+    """Every serving-capable name builds a ServingPolicy whose ``name``
+    round-trips; non-serving names fail with the capable list."""
+    from repro.serving import ServingPolicy
+
+    serving = policy_registry.names(backend="serving")
+    assert serving == ["lru", "cscan", "pbm", "opt"]
+    for name in serving:
+        pol = policy_registry.serving_policy(name)
+        assert isinstance(pol, ServingPolicy) and pol.name == name
+    with pytest.raises(KeyError, match="serving-capable"):
+        policy_registry.serving_policy("mru")
+    with pytest.raises(KeyError, match="registered policies"):
+        policy_registry.serving_policy("belady2000")

@@ -1,0 +1,201 @@
+"""The serving policy surface: registry-driven KV-page tiering.
+
+PagePool edge cases the refcounted prefix index must survive (release
+order, full-pool swap round-trips, alloc against a host-resident prefix),
+ServingEngine policy resolution through ``repro.core.policy_registry``,
+the forward-progress resume fallback, and the paper-ordering acceptance
+run at the benchmark's default operating point: PBM strictly beats LRU on
+swap volume with OPT bounding both.
+"""
+
+import pytest
+
+from repro.core import policy_registry
+from repro.serving import (
+    PagePool, PolicyDriver, Request, RequestKV, ServingEngine, prefix_hash,
+)
+
+
+def _stub(reqs):
+    return [7 for _ in reqs]
+
+
+# ------------------------------------------------------------ page pool ---
+
+def test_prefix_release_order_any_interleaving():
+    """Shared prefix pages survive any release order: the last holder's
+    release frees the slot and drops the index entry, earlier releases
+    only decrement."""
+    pool = PagePool(n_pages=8, page_size=4, page_bytes=64)
+    h = prefix_hash(list(range(4)))
+    a = pool.alloc(prefix_hash=h)
+    b = pool.alloc(prefix_hash=h)
+    c = pool.alloc(prefix_hash=h)
+    assert a == b == c and pool.meta[a].ref_count == 3
+    assert pool.free_count == 7
+    pool.release(b)
+    pool.release(a)
+    assert pool.meta[a].ref_count == 1
+    assert pool.prefix_index[h] == a      # still indexed while held
+    pool.release(c)
+    assert a not in pool.meta
+    assert h not in pool.prefix_index     # last release drops the entry
+    assert pool.free_count == 8
+
+
+def test_swap_round_trip_with_full_pool():
+    """swap_out frees slots that new allocs may take; swap_in then fails
+    cleanly (None, no partial state) until room exists, and the returned
+    pages keep their content identity (same meta object, new slot)."""
+    pool = PagePool(n_pages=4, page_size=4, page_bytes=64)
+    held = [pool.alloc() for _ in range(4)]
+    assert pool.free_count == 0 and pool.alloc() is None
+    mapping = pool.swap_out(held[:2])
+    uids = [mapping[p] for p in held[:2]]
+    assert all(u < 0 for u in uids) and pool.free_count == 2
+    filler = [pool.alloc(), pool.alloc()]     # pool full again
+    assert pool.swap_in(uids) is None         # no room: clean refusal
+    assert all(pool.meta[u].on_host for u in uids)
+    for p in filler:
+        pool.release(p)
+    back = pool.swap_in(uids)
+    assert back is not None and len(back) == 2
+    assert all(not pool.meta[s].on_host for s in back.values())
+    assert pool.swap_in_bytes == pool.swap_out_bytes == 2 * 64
+
+
+def test_alloc_on_host_resident_prefix_takes_fresh_page():
+    """A prefix page spilled to host must NOT be handed out by alloc (its
+    content is not in HBM): a new request for the same prefix gets a fresh
+    page, and the returning host copy keeps its own identity."""
+    pool = PagePool(n_pages=4, page_size=4, page_bytes=64)
+    h = prefix_hash([1, 2, 3, 4])
+    first = pool.alloc(prefix_hash=h)
+    mapping = pool.swap_out([first])
+    uid = mapping[first]
+    fresh = pool.alloc(prefix_hash=h)
+    assert fresh is not None and fresh != uid
+    assert pool.meta[fresh].ref_count == 1    # no sharing with a host copy
+    assert pool.prefix_index[h] == fresh
+    back = pool.swap_in([uid])
+    slot = back[uid]
+    # the established mapping wins; the returned copy serves its own owner
+    assert pool.prefix_index[h] == fresh and slot != fresh
+    pool.release(slot)
+    assert h in pool.prefix_index             # fresh page still indexed
+    pool.release(fresh)
+    assert h not in pool.prefix_index
+
+
+# ------------------------------------------------ registry resolution -----
+
+def test_engine_resolves_policy_strings_via_registry():
+    for name in policy_registry.names(backend="serving"):
+        pool = PagePool(n_pages=16, page_size=4, page_bytes=64)
+        eng = ServingEngine(pool, _stub, policy=name, max_batch=4)
+        assert eng.policy == name
+        assert eng.driver.policy.name == name
+
+
+def test_engine_rejects_unknown_and_non_serving_names():
+    pool = PagePool(n_pages=16, page_size=4, page_bytes=64)
+    with pytest.raises(KeyError, match="registered policies"):
+        ServingEngine(pool, _stub, policy="belady")
+    with pytest.raises(KeyError, match="serving-capable"):
+        ServingEngine(pool, _stub, policy="mru")
+
+
+# ------------------------------------------------- engine behaviour -------
+
+def test_resume_falls_through_policy_order_on_empty_machine():
+    """Forward progress when the preferred resume does not fit: with no
+    active requests and the nearest-completion candidate's host pages
+    exceeding free HBM, the engine resumes the next candidate in policy
+    order instead of wedging (the OPT deadlock regression)."""
+    pool = PagePool(n_pages=10, page_size=4, page_bytes=64)
+    eng = ServingEngine(pool, _stub, policy="opt", max_batch=2)
+    big = Request(prompt=list(range(4)), max_new_tokens=2)
+    small = Request(prompt=[9, 9, 9, 9], max_new_tokens=40)
+    for r, npages in ((big, 9), (small, 1)):
+        kv = RequestKV(pool, pool.page_size)
+        assert kv.attach_prefix(r.prompt) >= 0
+        assert kv.append_tokens(4 * (npages - 1))
+        r.kv = kv
+        eng.active.append(r)
+    # preempt both by hand so the machine is empty
+    for r in (big, small):
+        eng.active.remove(r)
+        r.swapped = True
+        mapping = pool.swap_out(r.kv.pages)
+        r.kv.pages = [mapping.get(p, p) for p in r.kv.pages]
+        eng.swapped.append(r)
+    # occupy HBM so big (9 host pages, nearest completion => preferred by
+    # opt's resume order) cannot fit, but small (1 page) can
+    blockers = [pool.alloc() for _ in range(8)]
+    assert all(b is not None for b in blockers)
+    eng._try_admit()
+    assert small in eng.active and big in eng.swapped
+    # order itself is still the policy's: big (2 remaining) before small
+    order = eng.driver.resume_order(eng.driver.view(eng))
+    assert order and order[0] is big
+
+
+def test_prefetch_stages_pages_while_batch_full():
+    """With a full batch and free headroom, the next resume candidate's
+    host pages come back ahead of need and its resume skips swap_delay."""
+    pool = PagePool(n_pages=64, page_size=4, page_bytes=64)
+    eng = ServingEngine(pool, _stub, policy="pbm", max_batch=2)
+    for _ in range(2):
+        eng.submit(Request(prompt=[1, 2, 3, 4], max_new_tokens=30))
+    eng.step()
+    assert len(eng.active) == 2            # batch full
+    # a previously-preempted request waits on the swapped queue
+    waiting = Request(prompt=[9, 9, 9, 9], max_new_tokens=20)
+    kv = RequestKV(pool, pool.page_size)
+    assert kv.attach_prefix(waiting.prompt) >= 0
+    assert kv.append_tokens(8)
+    waiting.kv = kv
+    waiting.swapped = True
+    mapping = pool.swap_out(kv.pages)
+    kv.pages = [mapping.get(p, p) for p in kv.pages]
+    assert any(p < 0 for p in kv.pages)    # its pages live on host
+    eng.swapped.append(waiting)
+    eng._prefetch_ahead()
+    assert waiting.prefetched
+    assert all(p >= 0 for p in waiting.kv.pages)   # staged back into HBM
+    while waiting not in eng.active and eng.stats.steps < 200:
+        eng.step()
+    assert waiting in eng.active
+    assert waiting.ready_step == waiting.admitted_step  # no swap_delay paid
+    assert eng.stats.prefetched_resumes == 1
+
+
+def test_engine_completes_under_every_registry_policy():
+    for name in policy_registry.names(backend="serving"):
+        pool = PagePool(n_pages=20, page_size=8, page_bytes=128)
+        eng = ServingEngine(pool, _stub, policy=name, max_batch=4)
+        for i in range(8):
+            eng.submit(Request(prompt=list(range(12)), max_new_tokens=24))
+        eng.run_to_completion(max_steps=5_000)
+        assert len(eng.finished) == 8, name
+        assert pool.free_count == pool.n_pages, name
+
+
+# ------------------------------------------------- paper ordering ---------
+
+def test_policy_ordering_at_default_operating_point():
+    """The acceptance run (benchmarks/serving_bench.py DEFAULT_POINT):
+    PBM strictly beats LRU on total swap volume, OPT bounds both, and no
+    policy is worse than LRU on p95 token latency."""
+    from benchmarks.serving_bench import DEFAULT_POINT, run_policy
+
+    rows = {p: run_policy(p, **DEFAULT_POINT)
+            for p in ("lru", "pbm", "opt")}
+    n = DEFAULT_POINT["n_requests"]
+    assert all(r["completed"] == n for r in rows.values())
+    # swap volume: opt <= pbm < lru — prediction pays, the oracle bounds it
+    assert rows["pbm"]["swap_gb"] < rows["lru"]["swap_gb"]
+    assert rows["opt"]["swap_gb"] <= rows["pbm"]["swap_gb"]
+    # latency tail: neither predictive policy may stall worse than LRU
+    assert rows["pbm"]["p95_token_gap"] <= rows["lru"]["p95_token_gap"]
+    assert rows["opt"]["p95_token_gap"] <= rows["lru"]["p95_token_gap"]

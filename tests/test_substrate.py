@@ -101,7 +101,7 @@ def test_prefix_pages_shared_across_requests():
 
 
 def test_swap_accounting_and_pool_invariants():
-    pool, eng = _mk_engine(policy="belady", pool_pages=24)
+    pool, eng = _mk_engine(policy="opt", pool_pages=24)
     for i in range(12):
         eng.submit(Request(prompt=list(range(24)), max_new_tokens=60))
     st_ = eng.run_to_completion(max_steps=10_000)

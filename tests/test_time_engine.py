@@ -17,13 +17,11 @@ tests pin the contracts the refactor introduced:
   ``vmap``;
 * the horizon's work is observable (``steps`` / ``macro_steps`` /
   ``skipped_time`` extras), not inferred;
-* ``SimState.time_passed`` (a slice count that was never a time) is now
-  ``slices_done`` with a deprecation alias, and truncated runs still
-  raise in ``cross_validate``;
+* ``SimState.time_passed`` (a slice count that was never a time) is
+  gone — the field is ``slices_done``, the old name no longer reads —
+  and truncated runs still raise in ``cross_validate``;
 * the budgeted FIFO-grant kernel matches its jnp oracle exactly.
 """
-
-import warnings
 
 import numpy as np
 import pytest
@@ -215,21 +213,19 @@ def test_horizon_reports_macro_steps_and_skipped_time():
     assert r_hor.steps < r_fix.steps
 
 
-def test_slices_done_rename_keeps_deprecated_alias():
+def test_time_passed_alias_is_gone():
     """``SimState.time_passed`` counted PBM slices, never time; the field
-    is now ``slices_done`` and the old name warns but still reads."""
+    is ``slices_done`` and the deprecated alias was removed — reading the
+    old name is an AttributeError, not a warning."""
     assert "slices_done" in SimState._fields
     assert "time_passed" not in SimState._fields
     db, ws, streams = _micro_shared()
     spec = build_spec(db, streams)
     from repro.core.array_sim.sim import init_state
     st = init_state(spec, ())
-    import repro.core.array_sim.sim as sim_mod
-    sim_mod._warned.discard("time-passed")
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        assert int(st.time_passed) == int(st.slices_done) == 0
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert int(st.slices_done) == 0
+    with pytest.raises(AttributeError):
+        st.time_passed
 
 
 def test_truncated_runs_still_raise_in_cross_validate(monkeypatch):
