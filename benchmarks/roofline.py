@@ -124,7 +124,8 @@ def analyse_cell(rec: Dict, hlo_path: str) -> Optional[Dict]:
 def run(dryrun_dir: str = DRYRUN_DIR) -> List[Dict]:
     rows = []
     for jf in sorted(glob.glob(os.path.join(dryrun_dir, "*__pod.json"))):
-        rec = json.load(open(jf))
+        with open(jf) as fh:
+            rec = json.load(fh)
         if rec["status"] == "skipped":
             rows.append({
                 "arch": rec["arch"], "shape": rec["shape"],

@@ -30,7 +30,7 @@ def main():
 
     rng = np.random.default_rng(0)
     system_prompt = list(rng.integers(0, cfg.vocab, 32))  # 2 shared pages
-    for i in range(6):
+    for _ in range(6):
         eng.submit(Request(
             prompt=system_prompt + list(rng.integers(0, cfg.vocab, 4)),
             max_new_tokens=8,
@@ -48,7 +48,7 @@ def main():
     eng2 = ServingEngine(pool2, lm2.step_fn, policy="opt", max_batch=4)
     rng = np.random.default_rng(0)
     system_prompt = list(rng.integers(0, cfg.vocab, 32))
-    for i in range(6):
+    for _ in range(6):
         eng2.submit(Request(
             prompt=system_prompt + list(rng.integers(0, cfg.vocab, 4)),
             max_new_tokens=8,

@@ -1,0 +1,45 @@
+"""Substrate contract checker: static analysis for the jit-purity,
+deprecated-surface, and registry-coherence invariants (DESIGN.md
+"substrate invariants").
+
+The whole reproduction hangs off contracts nothing used to enforce
+statically: ArrayPolicy hooks must be pure-jit pytree programs (PR 4),
+steppers must stay bit-compatible and single-trace (PR 5), and every
+registry capability must resolve on every backend it declares (PR 6).
+This package checks them *before* a 48-point validation sweep has to
+drift past its error bars:
+
+* :mod:`repro.analysis.lint` — stdlib-``ast`` lint pass over
+  ``src/repro`` (jit coercion / control flow / host calls in traced
+  regions, resurrected deprecated surfaces);
+* :mod:`repro.analysis.registry` — capability cross-check of every
+  :class:`~repro.core.policy_registry.PolicyEntry` against the methods
+  its factories' classes actually override;
+* :mod:`repro.analysis.sanitize` — the runtime half: drives
+  ``make_runner(sanitize=True)`` (checkify NaN/OOB + one-trace
+  assertion) over the micro and TPC-H smoke points;
+* ``python -m repro.analysis --check`` — the CI gate (exit 1 on any
+  finding, ``--json`` writes the findings report artifact).
+"""
+
+from .findings import Finding
+from .lint import lint_paths, lint_source, repo_src_root
+from .registry import check_registry
+
+__all__ = [
+    "Finding",
+    "check_registry",
+    "lint_paths",
+    "lint_source",
+    "repo_src_root",
+    "run_checks",
+]
+
+
+def run_checks(root=None, registry: bool = True):
+    """Run every static check; returns the combined finding list."""
+    findings = lint_paths(root)
+    if registry:
+        findings += check_registry()
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings

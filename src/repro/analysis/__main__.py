@@ -1,0 +1,81 @@
+"""CLI: ``python -m repro.analysis --check`` (the CI gate).
+
+Exit status is the contract: 0 when the tree is clean, 1 with
+``file:line: rule: message`` findings otherwise.  ``--json`` always
+writes the findings report (empty list included) so CI can upload it as
+an artifact next to the bench trend.  ``--sanitize-smoke`` runs the
+runtime half (checkify + one-trace) over the micro/TPC-H smoke points.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from . import run_checks
+from .sanitize import sanitize_smoke
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="substrate contract checker (DESIGN.md 'substrate "
+                    "invariants')",
+    )
+    ap.add_argument("--check", action="store_true",
+                    help="run the static checks (AST lint + registry "
+                         "coherence); exit 1 on any finding")
+    ap.add_argument("--root", default=None,
+                    help="lint this tree instead of the installed "
+                         "src/repro (a package dir named repro)")
+    ap.add_argument("--json", dest="json_out", default=None, metavar="PATH",
+                    help="write the findings report as JSON (CI artifact)")
+    ap.add_argument("--no-registry", action="store_true",
+                    help="skip the registry-coherence pass (pure AST mode; "
+                         "no policy imports)")
+    ap.add_argument("--sanitize-smoke", action="store_true",
+                    help="run make_runner(sanitize=True) over the micro + "
+                         "TPC-H smoke points (checkify NaN/OOB + one-trace "
+                         "assertion); exit 1 on any failure")
+    args = ap.parse_args(argv)
+
+    if not args.check and not args.sanitize_smoke:
+        ap.error("nothing to do: pass --check and/or --sanitize-smoke")
+
+    rc = 0
+    findings = []
+    if args.check:
+        findings = run_checks(root=args.root, registry=not args.no_registry)
+        for f in findings:
+            print(f.format())
+        if findings:
+            rc = 1
+            print(f"repro.analysis: {len(findings)} finding(s)",
+                  file=sys.stderr)
+        else:
+            print("repro.analysis: clean "
+                  "(jit-purity + deprecated-surface + registry-coherence)")
+
+    if args.json_out is not None:
+        out = Path(args.json_out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(
+            {"findings": [f.to_json() for f in findings],
+             "count": len(findings)}, indent=2) + "\n")
+
+    if args.sanitize_smoke:
+        print("sanitize smoke (checkify nan/oob + one-trace):")
+        failures = sanitize_smoke()
+        for line in failures:
+            print(f"FAIL {line}", file=sys.stderr)
+        if failures:
+            rc = 1
+        else:
+            print("sanitize smoke: clean")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

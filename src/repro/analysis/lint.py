@@ -1,0 +1,571 @@
+"""AST lint pass over ``src/repro`` — the substrate's jit-purity contract.
+
+The batched substrate only works because its traced regions are pure
+pytree programs: no Python control flow on traced values, no
+``float()``/``.item()`` materialisation mid-trace, no host library calls
+(numpy / random / time) inside a jitted path.  These are exactly the
+bugs that do NOT fail loudly — a ``float()`` on a traced scalar raises
+only at trace time under some call patterns, a host call silently bakes
+a trace-time constant into the compiled step, and Python ``if`` on a
+traced bool raises a ConcretizationTypeError whose blast radius is a
+48-point sweep later.  This pass finds them at lint time, with
+file:line findings.
+
+Traced regions (where the jit rules apply)
+------------------------------------------
+* every function in ``repro/kernels/*.py`` (the Pallas kernels and their
+  dispatch wrappers run inside jit by construction);
+* every function in ``repro/core/array_sim/policies.py`` and
+  ``repro/core/array_sim/coop.py`` (policy hooks and the cooperative
+  substrate are called from inside the traced step);
+* the *nested* functions of ``make_step`` / ``make_runner`` in
+  ``repro/core/array_sim/sim.py`` (the enclosing bodies are host-side
+  step *builders*: their ``float()``/numpy use is trace-time constant
+  folding and is allowed).
+
+A ``# analysis: host`` comment on (or directly above) a ``def`` opts a
+host-side helper out (e.g. ``coop.chunk_geometry``, the compiler-time
+geometry builder); ``# analysis: traced`` opts extra functions in —
+used for ``sim._u01`` / ``sim.init_state``, which are module-level but
+called from inside the traced step.
+
+Taint model
+-----------
+Function parameters are the traced roots (minus statics: ``self``,
+``spec``, int/bool/str-annotated or -defaulted params, and — kernels
+only — keyword-only params, the Pallas compile-time-knob idiom).
+Attribute reads of ``.spec`` / ``.refresh`` cut taint (``StepCtx.spec``
+is the static workload geometry and ``StepCtx.refresh`` the static
+slice-boundary flag), as do shape-metadata attributes
+(``.shape``/``.dtype``/``.ndim``/``.size`` — static under tracing).
+Assignments propagate taint; values built as Python list/tuple/dict
+literals or comprehensions are *containers* — iterating a Python list
+of traced leaves is fine, iterating a traced array is not.
+
+Deprecated surfaces (checked everywhere in ``src/repro``)
+---------------------------------------------------------
+* ``static_policy=`` call keyword — removed in PR 4 for the registry
+  ``policies=(name,)`` spelling (the ``make_runner`` tombstone guard
+  that raises on it is a parameter default, not a call, and stays);
+* integer policy ids at call sites (``policy=3``) — policy names are
+  the API, ids are a result-JSON contract owned by the registry;
+* ``time_passed`` — renamed ``slices_done`` in PR 5 (the old name
+  counted slices, not time; resurrecting it would miscount again).
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .findings import Finding
+
+__all__ = ["lint_paths", "lint_source", "repo_src_root"]
+
+# ----------------------------------------------------------------- config --
+
+#: parameters that are always static in traced regions
+STATIC_PARAM_NAMES = {"self", "cls", "spec"}
+#: attribute reads that cut taint: static workload geometry / flags —
+#: ``.spec`` (SimSpec, static by construction), ``.refresh`` (the static
+#: slice-boundary compile flag), ``.cooperative`` / ``.fifo_tie`` /
+#: ``.name`` (static ArrayPolicy class knobs)
+STATIC_CHAIN_ATTRS = {"spec", "refresh", "cooperative", "fifo_tie", "name"}
+#: ... and shape metadata (static under tracing)
+STATIC_META_ATTRS = {"shape", "dtype", "ndim", "size"}
+#: host modules that must not be *called* inside a traced region
+#: (attribute constants like ``np.inf`` / ``np.int32``-as-dtype are fine)
+HOST_MODULES = {"np", "numpy", "random", "time", "_time"}
+#: Python builtins that materialise a traced value
+COERCIONS = {"float", "int", "bool"}
+MATERIALIZERS = {"item", "tolist"}
+#: builtins whose result is static structure inspection, not data
+STATIC_INSPECTORS = {"isinstance", "hasattr", "len", "callable", "getattr"}
+
+_PRAGMA_HOST = "# analysis: host"
+_PRAGMA_TRACED = "# analysis: traced"
+
+
+def repo_src_root() -> Path:
+    """The ``src/repro`` package directory this module shipped in."""
+    return Path(__file__).resolve().parent.parent
+
+
+# ------------------------------------------------------- file classifiers --
+
+def _norm(rel: str) -> str:
+    return rel.replace("\\", "/")
+
+
+def _file_kind(rel: str) -> str:
+    """"kernels" | "traced" | "sim" | "host" for a repo-relative path."""
+    rel = _norm(rel)
+    if "/kernels/" in rel or rel.startswith("kernels/"):
+        return "kernels"
+    if rel.endswith(("core/array_sim/policies.py", "core/array_sim/coop.py")):
+        return "traced"
+    if rel.endswith("core/array_sim/sim.py"):
+        return "sim"
+    return "host"
+
+
+def _pragma(src_lines: Sequence[str], node: ast.AST) -> Optional[str]:
+    """The ``# analysis:`` pragma on the def line or the line above."""
+    for ln in (node.lineno - 1, node.lineno - 2):
+        if 0 <= ln < len(src_lines):
+            text = src_lines[ln]
+            if _PRAGMA_HOST in text:
+                return "host"
+            if _PRAGMA_TRACED in text:
+                return "traced"
+    return None
+
+
+# ----------------------------------------------------------- taint engine --
+
+class _Scope:
+    """Name -> (tainted, container) for one traced function body."""
+
+    def __init__(self, parent: Optional["_Scope"] = None):
+        self.tainted: Dict[str, bool] = dict(parent.tainted) if parent else {}
+        self.container: Set[str] = set(parent.container) if parent else set()
+
+    def set(self, name: str, tainted: bool, container: bool = False) -> None:
+        self.tainted[name] = tainted
+        if container:
+            self.container.add(name)
+        else:
+            self.container.discard(name)
+
+    def is_tainted(self, name: str) -> bool:
+        return self.tainted.get(name, False)
+
+    def is_container(self, name: str) -> bool:
+        return name in self.container
+
+
+def _static_params(fn: ast.FunctionDef, kind: str) -> Set[str]:
+    """Parameter names treated as static (trace-time constants)."""
+    static: Set[str] = set()
+    args = fn.args
+    pos = list(args.posonlyargs) + list(args.args)
+    defaults = list(args.defaults)
+    # align defaults with the tail of the positional params
+    pad = [None] * (len(pos) - len(defaults))
+    for a, d in zip(pos, pad + defaults):
+        if a.arg in STATIC_PARAM_NAMES:
+            static.add(a.arg)
+        elif _static_annotation(a.annotation):
+            static.add(a.arg)
+        elif _static_default(d):
+            static.add(a.arg)
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        if (
+            kind == "kernels"          # Pallas idiom: kwonly = compile-time
+            or a.arg in STATIC_PARAM_NAMES
+            or _static_annotation(a.annotation)
+            or _static_default(d)
+        ):
+            static.add(a.arg)
+    return static
+
+
+def _static_annotation(ann: Optional[ast.expr]) -> bool:
+    return isinstance(ann, ast.Name) and ann.id in ("int", "bool", "str")
+
+
+def _static_default(d: Optional[ast.expr]) -> bool:
+    return (
+        isinstance(d, ast.Constant)
+        and d.value is not None
+        and isinstance(d.value, (int, bool, str))
+        and not isinstance(d.value, float)
+    )
+
+
+def _is_host_module_call(func: ast.expr) -> Optional[str]:
+    """Dotted-call root if it is a host module (``np.median`` -> "np")."""
+    node = func
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    if isinstance(node, ast.Name) and node.id in HOST_MODULES:
+        return node.id
+    return None
+
+
+class _TracedChecker(ast.NodeVisitor):
+    """Walks ONE traced function body, tracking taint per name."""
+
+    def __init__(self, rel: str, kind: str, findings: List[Finding],
+                 scope: _Scope):
+        self.rel = rel
+        self.kind = kind
+        self.findings = findings
+        self.scope = scope
+
+    # ------------------------------------------------------------ helpers --
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            rule=rule, path=self.rel, line=node.lineno,
+            col=node.col_offset, message=message,
+        ))
+
+    def tainted(self, node: Optional[ast.expr]) -> bool:
+        """Does this expression carry traced data?"""
+        if node is None:
+            return False
+        if isinstance(node, ast.Name):
+            return self.scope.is_tainted(node.id)
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_CHAIN_ATTRS or node.attr in STATIC_META_ATTRS:
+                return False
+            return self.tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.tainted(node.value) or self.tainted(node.slice)
+        if isinstance(node, ast.Call):
+            return (
+                self.tainted(node.func)
+                or any(self.tainted(a) for a in node.args)
+                or any(self.tainted(k.value) for k in node.keywords)
+            )
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Lambda):
+            return False
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+            return any(self.tainted(g.iter) for g in node.generators) \
+                or self.tainted(node.elt)
+        if isinstance(node, ast.DictComp):
+            return any(self.tainted(g.iter) for g in node.generators) \
+                or self.tainted(node.key) or self.tainted(node.value)
+        return any(self.tainted(c) for c in ast.iter_child_nodes(node)
+                   if isinstance(c, ast.expr))
+
+    def container(self, node: Optional[ast.expr]) -> bool:
+        """Is this expression a *Python* container (list/tuple/dict), so
+        that iterating it is host-side structure, not a traced array?"""
+        if isinstance(node, (ast.List, ast.Tuple, ast.Set, ast.Dict,
+                             ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+            return True
+        if isinstance(node, ast.Name):
+            return self.scope.is_container(node.id)
+        if isinstance(node, ast.IfExp):
+            return self.container(node.body) or self.container(node.orelse)
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in (
+                    "list", "tuple", "dict", "zip", "enumerate", "range",
+                    "sorted", "reversed", "map", "filter"):
+                return True
+        return False
+
+    def _dynamic_test(self, test: ast.expr) -> bool:
+        """Does a branch test depend on traced data?  ``is``/``is not``
+        comparisons are static structure checks (the ``x is None``
+        idiom) and never count; ``any()``/``all()`` over a Python
+        container of traced leaves count only if their element test
+        does."""
+        if isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not):
+            return self._dynamic_test(test.operand)
+        if isinstance(test, ast.BoolOp):
+            return any(self._dynamic_test(v) for v in test.values)
+        if isinstance(test, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+            return False
+        if isinstance(test, ast.Call):
+            f = test.func
+            if isinstance(f, ast.Name):
+                if f.id in STATIC_INSPECTORS:
+                    return False
+                if f.id in ("any", "all") and len(test.args) == 1:
+                    arg = test.args[0]
+                    if isinstance(arg, ast.GeneratorExp):
+                        # iterating a traced array is dynamic regardless
+                        for g in arg.generators:
+                            if self.tainted(g.iter) \
+                                    and not self.container(g.iter):
+                                return True
+                        return self._dynamic_test(arg.elt)
+        return self.tainted(test)
+
+    def _bind_target(self, target: ast.expr, tainted: bool,
+                     container: bool) -> None:
+        if isinstance(target, ast.Name):
+            self.scope.set(target.id, tainted, container)
+        elif isinstance(target, ast.Starred):
+            self._bind_target(target.value, tainted, container=True)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for el in target.elts:
+                self._bind_target(el, tainted, container=False)
+        # attribute/subscript targets: no name to bind
+
+    # --------------------------------------------------------- statements --
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.generic_visit(node)        # rule sites inside the value first
+        t = self.tainted(node.value)
+        c = self.container(node.value)
+        for target in node.targets:
+            if (isinstance(target, (ast.Tuple, ast.List))
+                    and isinstance(node.value, (ast.Tuple, ast.List))
+                    and len(target.elts) == len(node.value.elts)):
+                for el, val in zip(target.elts, node.value.elts):
+                    self._bind_target(el, self.tainted(val),
+                                      self.container(val))
+            else:
+                self._bind_target(target, t, c)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self.generic_visit(node)
+        if node.value is not None:
+            self._bind_target(node.target, self.tainted(node.value),
+                              self.container(node.value))
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.generic_visit(node)
+        if isinstance(node.target, ast.Name):
+            t = (self.scope.is_tainted(node.target.id)
+                 or self.tainted(node.value))
+            self.scope.set(node.target.id, t,
+                           self.scope.is_container(node.target.id))
+
+    def visit_If(self, node: ast.If) -> None:
+        if self._dynamic_test(node.test):
+            self._emit(
+                "jit-control-flow", node,
+                "Python `if` on a traced value inside a jitted region "
+                "(use jnp.where / lax.cond; `ctx.refresh` and other "
+                "static closure flags MAY branch)",
+            )
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        if self._dynamic_test(node.test):
+            self._emit(
+                "jit-control-flow", node,
+                "Python `while` on a traced value inside a jitted region "
+                "(use jax.lax.while_loop)",
+            )
+        self.generic_visit(node)
+
+    def _check_loop_iter(self, node: ast.AST, it: ast.expr) -> None:
+        bare = isinstance(it, (ast.Name, ast.Attribute, ast.Subscript))
+        if bare and self.tainted(it) and not self.container(it):
+            self._emit(
+                "jit-control-flow", node,
+                "Python `for` over a traced array inside a jitted region "
+                "(use jax.lax.fori_loop / scan, or keep the iterable a "
+                "static Python sequence)",
+            )
+        elif isinstance(it, ast.Call) and isinstance(it.func, ast.Name) \
+                and it.func.id == "range" \
+                and any(self.tainted(a) for a in it.args):
+            self._emit(
+                "jit-control-flow", node,
+                "`range()` over a traced length inside a jitted region "
+                "(lengths must be static: shapes, closure ints)",
+            )
+
+    def visit_For(self, node: ast.For) -> None:
+        self._check_loop_iter(node, node.iter)
+        self._bind_target(node.target, self.tainted(node.iter), False)
+        self.generic_visit(node)
+
+    def visit_comprehension(self, node: ast.comprehension) -> None:
+        self._check_loop_iter(node.iter, node.iter)
+        self._bind_target(node.target, self.tainted(node.iter), False)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        if isinstance(func, ast.Name) and func.id in COERCIONS:
+            if any(self.tainted(a) for a in node.args):
+                self._emit(
+                    "jit-coercion", node,
+                    f"`{func.id}()` on a traced value inside a jitted "
+                    "region (materialises at trace time; keep it an "
+                    "array, or derive the scalar from static geometry)",
+                )
+        elif isinstance(func, ast.Attribute) and func.attr in MATERIALIZERS:
+            if self.tainted(func.value):
+                self._emit(
+                    "jit-coercion", node,
+                    f"`.{func.attr}()` on a traced value inside a jitted "
+                    "region (host materialisation breaks the pure-pytree "
+                    "step contract)",
+                )
+        root = _is_host_module_call(func)
+        if root is not None:
+            self._emit(
+                "jit-host-call", node,
+                f"`{ast.unparse(func)}()` call inside a jitted region "
+                f"({root} runs on host at trace time: the result is baked "
+                "in as a constant — use jnp, or hoist to the static "
+                "step-builder body)",
+            )
+        self.generic_visit(node)
+
+    # nested defs inherit the enclosing taint environment
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        _check_traced_function(node, self.rel, self.kind, self.findings,
+                               parent=self.scope)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        scope = _Scope(self.scope)
+        for a in node.args.args + node.args.kwonlyargs:
+            scope.set(a.arg, True)
+        sub = _TracedChecker(self.rel, self.kind, self.findings, scope)
+        sub.visit(node.body)
+
+
+def _check_traced_function(fn: ast.FunctionDef, rel: str, kind: str,
+                           findings: List[Finding],
+                           parent: Optional[_Scope] = None) -> None:
+    scope = _Scope(parent)
+    static = _static_params(fn, kind)
+    args = fn.args
+    for a in (list(args.posonlyargs) + list(args.args)
+              + list(args.kwonlyargs)):
+        scope.set(a.arg, a.arg not in static)
+    if args.vararg is not None:
+        scope.set(args.vararg.arg, True, container=True)
+    if args.kwarg is not None:
+        scope.set(args.kwarg.arg, True, container=True)
+    checker = _TracedChecker(rel, kind, findings, scope)
+    for stmt in fn.body:
+        checker.visit(stmt)
+
+
+# --------------------------------------------------- deprecated surfaces --
+
+class _DeprecatedChecker(ast.NodeVisitor):
+    """Whole-file rules: resurrected pre-registry / pre-PR-5 surfaces."""
+
+    def __init__(self, rel: str, findings: List[Finding]):
+        self.rel = rel
+        self.findings = findings
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            rule=rule, path=self.rel, line=node.lineno,
+            col=node.col_offset, message=message,
+        ))
+
+    def visit_Call(self, node: ast.Call) -> None:
+        for kw in node.keywords:
+            if kw.arg == "static_policy":
+                self._emit(
+                    "deprecated-static-policy", kw.value,
+                    "`static_policy=` was removed in PR 4; pass "
+                    "`policies=(name,)` resolved through "
+                    "repro.core.policy_registry",
+                )
+            elif kw.arg == "policy" and isinstance(kw.value, ast.Constant) \
+                    and type(kw.value.value) is int:
+                self._emit(
+                    "deprecated-int-policy-id", kw.value,
+                    "integer policy id at a call site; policy *names* are "
+                    "the API — ids are a registry-owned result-JSON "
+                    "contract (policy_registry.array_ids)",
+                )
+            elif kw.arg == "policies" and isinstance(
+                    kw.value, (ast.Tuple, ast.List)) and any(
+                    isinstance(el, ast.Constant) and type(el.value) is int
+                    for el in kw.value.elts):
+                self._emit(
+                    "deprecated-int-policy-id", kw.value,
+                    "integer policy ids in a `policies=` call keyword; "
+                    "pass registry names",
+                )
+            if kw.arg == "time_passed":
+                self._emit(
+                    "deprecated-time-passed", kw.value,
+                    "`time_passed` was renamed `slices_done` in PR 5",
+                )
+        self.generic_visit(node)
+
+    def _check_name(self, node: ast.AST, name: str) -> None:
+        if name == "time_passed":
+            self._emit(
+                "deprecated-time-passed", node,
+                "`time_passed` was renamed `slices_done` in PR 5 (it "
+                "counted slices, never time; the old name must not read)",
+            )
+
+    def visit_Name(self, node: ast.Name) -> None:
+        self._check_name(node, node.id)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        self._check_name(node, node.attr)
+        self.generic_visit(node)
+
+    def visit_arg(self, node: ast.arg) -> None:
+        self._check_name(node, node.arg)
+
+
+# -------------------------------------------------------------- file pass --
+
+#: ``sim.py`` step/runner builders whose *nested* defs are the traced step
+_SIM_BUILDERS = {"make_step", "make_runner"}
+
+
+def _walk_defs(body: Sequence[ast.stmt]):
+    """Top-level and class-level defs of a module body (not nested ones —
+    those belong to their enclosing traced region)."""
+    for node in body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield sub
+
+
+def lint_source(source: str, rel: str) -> List[Finding]:
+    """Lint one file's source; ``rel`` is its repo-relative path (used to
+    classify traced regions, so virtual paths work for tests)."""
+    findings: List[Finding] = []
+    try:
+        tree = ast.parse(source, filename=rel)
+    except SyntaxError as exc:
+        findings.append(Finding(
+            rule="syntax-error", path=rel, line=exc.lineno or 1,
+            message=str(exc.msg),
+        ))
+        return findings
+    src_lines = source.splitlines()
+    _DeprecatedChecker(rel, findings).visit(tree)
+
+    kind = _file_kind(rel)
+    if kind in ("kernels", "traced"):
+        for fn in _walk_defs(tree.body):
+            if _pragma(src_lines, fn) != "host":
+                _check_traced_function(fn, rel, kind, findings)
+    elif kind == "sim":
+        for fn in _walk_defs(tree.body):
+            if _pragma(src_lines, fn) == "traced":
+                _check_traced_function(fn, rel, kind, findings)
+            elif fn.name in _SIM_BUILDERS:
+                for sub in fn.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        _check_traced_function(sub, rel, kind, findings)
+    return findings
+
+
+def lint_paths(root=None) -> List[Finding]:
+    """Lint every ``*.py`` under ``root`` (default: the installed
+    ``src/repro`` tree)."""
+    root = Path(root) if root is not None else repo_src_root()
+    findings: List[Finding] = []
+    for path in sorted(root.rglob("*.py")):
+        try:
+            rel = str(path.relative_to(root.parent))
+        except ValueError:
+            rel = str(path)
+        findings += lint_source(path.read_text(encoding="utf-8"), rel)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings

@@ -1,0 +1,101 @@
+"""Runtime half of the contract checker: the jit sanitizer smoke.
+
+``make_runner(sanitize=True)`` wraps the compiled run in
+``jax.experimental.checkify`` NaN/OOB-index checks and a trace counter
+(see ``array_sim.sim``).  This module drives that mode over the default
+micro and TPC-H smoke points for every registered array policy on both
+steppers — one runner per (stepper x workload), the whole four-policy
+sweep through each runner — and requires:
+
+* zero checkify errors (no NaN produced by any step primitive, no
+  out-of-bounds gather/scatter index anywhere in the step);
+* exactly ONE jit trace per runner across its whole sweep (a pytree
+  leaf changing shape/dtype between configs would silently retrace and
+  10x the sweep; the counter turns that into a hard failure);
+* no truncated runs (the livelock guard firing on a known-good smoke
+  point means the sanitized step diverged from the plain one).
+
+CI runs this via ``python -m repro.analysis --sanitize-smoke``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence
+
+__all__ = ["sanitize_smoke"]
+
+#: buffer fraction of the accessed set at the default smoke points
+_BUFFER_FRAC = 0.4
+_BANDWIDTH = 700e6
+
+
+def _micro_point():
+    from repro.core.workload import (
+        make_lineitem_db, micro_accessed_bytes, micro_streams,
+    )
+
+    db = make_lineitem_db(scale_tuples=4_000_000)
+    streams = micro_streams(db, n_streams=2, queries_per_stream=2, seed=3)
+    return "micro", db, streams, _BUFFER_FRAC * micro_accessed_bytes(db)
+
+
+def _tpch_point():
+    from repro.core.workload import (
+        make_tpch_db, tpch_accessed_bytes, tpch_streams,
+    )
+
+    db = make_tpch_db(scale=0.02)
+    streams = tpch_streams(db, n_streams=2, seed=7)
+    return ("tpch", db, streams,
+            _BUFFER_FRAC * tpch_accessed_bytes(db, streams))
+
+
+def sanitize_smoke(
+    steppers: Sequence[str] = ("fixed", "horizon"),
+    policies: Optional[Sequence[str]] = None,
+    log: Optional[Callable[[str], None]] = print,
+) -> List[str]:
+    """Run the sanitized smoke sweep; returns a list of failure strings
+    (empty = clean).  ``policies`` defaults to every registered array
+    policy."""
+    import jax
+
+    from repro.core import policy_registry
+    from repro.core.array_sim import (
+        compile_workload, make_config, make_runner, result_from_state,
+    )
+
+    if policies is None:
+        policies = policy_registry.names(backend="array")
+    failures: List[str] = []
+    for wl_name, db, streams, capacity in (_micro_point(), _tpch_point()):
+        spec = compile_workload(db, streams)
+        for stepper in steppers:
+            runner = make_runner(spec, bandwidth_ref=_BANDWIDTH,
+                                 stepper=stepper, sanitize=True)
+            for pol in policies:
+                cfg = make_config(spec, capacity, _BANDWIDTH, pol)
+                tag = f"{wl_name}/{stepper}/{pol}"
+                try:
+                    state = jax.block_until_ready(runner(cfg))
+                except Exception as exc:  # noqa: BLE001 — report, keep going
+                    failures.append(f"{tag}: {type(exc).__name__}: {exc}")
+                    continue
+                res = result_from_state(state, pol,
+                                        dt_ref=runner.dt_ref)
+                if res.extras.get("truncated"):
+                    failures.append(
+                        f"{tag}: truncated "
+                        f"({res.extras['unfinished_streams']} unfinished)")
+                elif log is not None:
+                    log(f"  {tag}: ok ({res.extras['steps']} steps, "
+                        f"{res.total_io_bytes / 1e9:.2f} GB io)")
+            traces = runner.trace_count()
+            if traces != 1:
+                failures.append(
+                    f"{wl_name}/{stepper}: {traces} jit traces for one "
+                    f"{len(policies)}-policy sweep (expected exactly 1)")
+            elif log is not None:
+                log(f"  {wl_name}/{stepper}: 1 trace across "
+                    f"{len(policies)} policies")
+    return failures

@@ -378,7 +378,7 @@ def clear_on_query_change(done, finished):
     return jnp.where(finished[:, None], False, done)
 
 
-def chunk_geometry(db, tnames, page_rows):
+def chunk_geometry(db, tnames, page_rows):  # analysis: host
     """Compiler helper: global chunk ids for the compiled tables.
 
     Returns ``(n_chunks, chunk_first, chunk_last, chunk_table,

@@ -313,7 +313,7 @@ class ArrayPolicy:
         alone (trigger arrival, completion, io-credit).  Only policies
         whose consumption model owns a clock override this (array-CScan:
         the consuming chunk's completion)."""
-        return None
+        return None  # noqa: RET501  (hook contract: explicit None means no clock)
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"{type(self).__name__}({self.name})"

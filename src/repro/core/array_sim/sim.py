@@ -1000,7 +1000,7 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             coop=coop_io if has_coop else None,
         )
         pstate2 = []
-        for j, (p, ps) in enumerate(zip(policies, state.pstate)):
+        for p, ps in zip(policies, state.pstate):
             if p.cooperative:
                 # the cooperative substrate owns its state transitions
                 pstate2.append(coop_mod.CoopState(
@@ -1214,6 +1214,7 @@ def make_runner(
     h_max: float = 8.0,
     h_io: float = 3.0,
     mesh=None,
+    sanitize: bool = False,
 ):
     """Jitted ``run(cfg) -> SimState``: steps until every stream finishes.
 
@@ -1256,6 +1257,19 @@ def make_runner(
     ``shard_map`` over the lane axis — lanes spread across the mesh
     devices, each shard running the vmapped runner with per-lane horizons
     intact; the lane count must divide the mesh size evenly.
+
+    ``sanitize=True`` is the contract-checker mode (``repro.analysis``):
+    the run compiles under ``jax.experimental.checkify`` NaN + OOB-index
+    checks — any step primitive producing a NaN, or any gather/scatter
+    index leaving its array, raises instead of propagating garbage
+    through a sweep — and the runner hard-errors if it is ever traced
+    more than once (a pytree leaf changing shape/dtype between calls is
+    a silent 10x recompile slowdown; here it is a ``RuntimeError``).
+    Every runner (sanitized or not) exposes ``runner.trace_count()``,
+    the number of jit traces taken so far — the one-trace-per-sweep
+    invariant is asserted in CI against the plain runners too.
+    Incompatible with ``mesh`` (checkify does not compose with
+    ``shard_map`` here; sanitize single lanes instead).
     """
     if static_policy is not _UNSET:
         raise TypeError(
@@ -1263,6 +1277,11 @@ def make_runner(
             "policies=(name,) — resolved through "
             "repro.core.policy_registry (None still means every array "
             "policy)"
+        )
+    if sanitize and mesh is not None:
+        raise ValueError(
+            "make_runner(sanitize=True) does not compose with mesh= "
+            "(checkify under shard_map); sanitize unsharded lanes instead"
         )
     pols = resolve_policies(policies)
     dt = float(step_pages) * float(np.max(spec.page_size)) / float(bandwidth_ref)
@@ -1329,6 +1348,15 @@ def make_runner(
 
             return jax.lax.while_loop(cond, slice_body, carry)[0]
 
+    # one trace per (stepper x policy-set) is a substrate invariant: the
+    # counter ticks inside the traced body, so it counts TRACES, not
+    # calls — a leaf changing shape/dtype between configs shows up here
+    trace_counter = {"n": 0}
+
+    def counted_run(cfg: ArraySimConfig) -> SimState:
+        trace_counter["n"] += 1
+        return run(cfg)
+
     if mesh is not None:
         from jax.experimental.shard_map import shard_map
 
@@ -1339,14 +1367,36 @@ def make_runner(
             )
         pspec = jax.sharding.PartitionSpec(mesh.axis_names[0])
         runner = jax.jit(shard_map(
-            jax.vmap(run), mesh=mesh,
+            jax.vmap(counted_run), mesh=mesh,
             in_specs=(pspec,), out_specs=pspec, check_rep=False,
         ))
+    elif sanitize:
+        from jax.experimental import checkify
+
+        checked = jax.jit(checkify.checkify(
+            counted_run,
+            errors=checkify.nan_checks | checkify.index_checks,
+        ))
+
+        def runner(cfg: ArraySimConfig) -> SimState:
+            err, state = checked(cfg)
+            err.throw()
+            if trace_counter["n"] > 1:
+                raise RuntimeError(
+                    f"make_runner(sanitize=True): {trace_counter['n']} jit "
+                    "traces for one runner — a config leaf changed "
+                    "shape/dtype between calls (stack configs with "
+                    "stack_configs / keep leaves f32/i32 scalars); every "
+                    "(stepper x policy-set) must compile exactly once"
+                )
+            return state
     else:
-        runner = jax.jit(run)
+        runner = jax.jit(counted_run)
     runner.dt_ref = dt
     runner.stepper = stepper
     runner.lane_mesh = mesh
+    runner.sanitize = sanitize
+    runner.trace_count = lambda: trace_counter["n"]
     return runner
 
 
@@ -1412,12 +1462,14 @@ def run_workload_array(
     spec: Optional[SimSpec] = None,
     runner=None,
     stepper: str = "fixed",
+    sanitize: bool = False,
 ) -> ArrayResult:
     """Array-backend counterpart of ``repro.core.run_workload`` for every
     registered array policy (lru / pbm / cscan / opt).  Accepts any
     workload the compiler can lower — multi-table streams included.
-    ``stepper`` selects the time engine (see :func:`make_runner`) when no
-    pre-built ``runner`` is passed.
+    ``stepper`` selects the time engine and ``sanitize`` the checkify
+    contract-checker mode (see :func:`make_runner`) when no pre-built
+    ``runner`` is passed.
     Check ``result.extras["truncated"]`` when lowering ``max_time``: a run
     cut short by the livelock guard reports lower bounds, not results."""
     from .compiler import compile_workload
@@ -1428,7 +1480,8 @@ def run_workload_array(
         runner = make_runner(spec, bandwidth_ref=bandwidth,
                              time_slice=time_slice,
                              prefetch_pages=prefetch_pages,
-                             policies=(policy_name,), stepper=stepper)
+                             policies=(policy_name,), stepper=stepper,
+                             sanitize=sanitize)
     cfg = make_config(spec, capacity_bytes, bandwidth, policy_name,
                       max_time=max_time)
     t0 = _time.time()

@@ -339,7 +339,10 @@ def fit_bars_literal(rows: List[Dict]) -> str:
            "into validate.py:"]
     for wl in sorted(per_wl):
         out.append(f"{names.get(wl, wl.upper() + '_ERROR_BARS')} = {{")
-        for (frac, pol), bar in sorted(per_wl[wl].items(), key=str):
+        # deterministic key order — numeric frac ascending, then policy
+        # name — so a refit diff is copy-paste stable (str-sorting put
+        # (0.25, ...) before (0.1, ...) whenever both appeared)
+        for (frac, pol), bar in sorted(per_wl[wl].items()):
             out.append(f"    ({frac}, {pol!r}): {bar:.2f},")
         out.append("}")
     return "\n".join(out)

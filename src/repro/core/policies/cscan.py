@@ -121,10 +121,8 @@ class ABM:
 
     def available_for(self, scan: "ScanState", chunk_id: int) -> bool:
         key = (scan.table.name, chunk_id)
-        for p in self.chunk_pages_for_columns(key, scan.spec.columns):
-            if not self.pool.is_resident(p):
-                return False
-        return True
+        return all(self.pool.is_resident(p)
+                   for p in self.chunk_pages_for_columns(key, scan.spec.columns))
 
     # ---------------------------------------------------------- registration
     def register(self, scan: "ScanState", now: float) -> None:
@@ -277,7 +275,7 @@ class ABM:
             victims.append((keep, key, resident, sum(p.size_bytes for p in resident)))
         victims.sort(key=lambda t: (t[0], t[1]))
         out: List[Page] = []
-        for keep, key, pages, nbytes in victims:
+        for _keep, _key, pages, nbytes in victims:
             if free >= need:
                 break
             out.extend(pages)

@@ -113,7 +113,7 @@ class OraclePolicy(Policy):
             nxt = self._next_use(pid)
             scored.append((nxt if nxt is not None else float("inf"), pid, page))
         scored.sort(key=lambda t: (-t[0], repr(t[1])))
-        for _, pid, page in scored:
+        for _, _pid, page in scored:
             if freed >= bytes_needed:
                 break
             victims.append(page)

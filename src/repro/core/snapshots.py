@@ -132,7 +132,7 @@ def classify_chunks(
     for s in live_snapshots:
         by_version.setdefault(s.version, []).append(s)
 
-    for version, snaps in by_version.items():
+    for _version, snaps in by_version.items():
         # Longest prefix (in pages, per column) present in >= 2 snapshots.
         if len(snaps) >= 2:
             best: Optional[Dict[str, int]] = None

@@ -1,0 +1,305 @@
+"""Substrate contract checker: both directions.
+
+Green direction — the shipped tree lints clean (jit-purity, deprecated
+surfaces, registry coherence) and every runner traces exactly once.
+Red direction — seeded violations (a ``float()`` in ``score_victims``,
+Python ``if`` on a traced value, a resurrected ``static_policy=``, a
+PolicyEntry claiming a backend it does not implement, a forced retrace
+under ``sanitize=True``) each produce the specific finding or error.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import check_registry, lint_source, run_checks
+from repro.core.policy_registry import PolicyEntry
+from repro.core.workload import make_lineitem_db, micro_streams
+from repro.core.array_sim import (
+    build_spec,
+    make_config,
+    make_runner,
+    result_from_state,
+)
+
+TRACED_REL = "repro/core/array_sim/policies.py"
+
+
+def _lint(src: str, rel: str = TRACED_REL):
+    return lint_source(textwrap.dedent(src), rel)
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ------------------------------------------------------- green direction --
+
+def test_shipped_tree_is_clean():
+    """The acceptance gate: zero findings on the tree as shipped."""
+    findings = run_checks()
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_registry_is_coherent():
+    assert check_registry() == []
+
+
+# ------------------------------------------------- seeded jit violations --
+
+def test_float_on_traced_score_is_flagged():
+    findings = _lint("""
+        class P:
+            def score_victims(self, state, ctx):
+                score = state.last_used + 1.0
+                return float(score)
+    """)
+    assert _rules(findings) == ["jit-coercion"]
+    assert findings[0].line == 5
+    assert findings[0].path == TRACED_REL
+
+
+def test_python_if_on_traced_value_is_flagged():
+    findings = _lint("""
+        def hook(state, ctx):
+            if state.clock > 0:
+                return state
+            return state
+    """)
+    assert _rules(findings) == ["jit-control-flow"]
+
+
+def test_static_branches_are_not_flagged():
+    """`ctx.refresh`, `x is None`, isinstance, and shape metadata are
+    static under tracing — the exact idioms the substrate relies on."""
+    findings = _lint("""
+        def hook(state, ctx, extra=None):
+            if ctx.refresh:
+                state = state + 1
+            if extra is None:
+                extra = 0
+            if isinstance(state, tuple):
+                pass
+            if state.shape[0] > 4:
+                pass
+            return state + extra
+    """)
+    assert findings == []
+
+
+def test_host_module_call_is_flagged_but_constants_are_not():
+    findings = _lint("""
+        def hook(state, ctx):
+            lo = np.inf
+            return np.median(state) + lo
+    """)
+    assert _rules(findings) == ["jit-host-call"]
+
+
+def test_item_materialisation_is_flagged():
+    findings = _lint("""
+        def hook(state, ctx):
+            return state.clock.item()
+    """)
+    assert _rules(findings) == ["jit-coercion"]
+
+
+def test_loop_over_traced_array_is_flagged():
+    findings = _lint("""
+        def hook(state, ctx):
+            acc = 0
+            for v in state.last_used:
+                acc = acc + v
+            for _ in range(state.n_live):
+                acc = acc + 1
+            return acc
+    """)
+    assert _rules(findings) == ["jit-control-flow", "jit-control-flow"]
+
+
+def test_loop_over_python_container_of_traced_leaves_is_fine():
+    findings = _lint("""
+        def hook(state, ctx):
+            leaves = [state.a, state.b]
+            acc = 0
+            for v in leaves:
+                acc = acc + v
+            return acc
+    """)
+    assert findings == []
+
+
+def test_pragma_host_opts_out():
+    findings = _lint("""
+        def geometry(db, tnames):  # analysis: host
+            return float(db.total_bytes)
+    """)
+    assert findings == []
+
+
+def test_kernels_kwonly_params_are_static():
+    """The Pallas compile-time-knob idiom: kwonly params may branch;
+    positional (traced) params may not."""
+    findings = _lint("""
+        def kernel(x, *, block):
+            if block > 8:
+                x = x * 2
+            if x.sum() > 0:
+                x = x + 1
+            return x
+    """, rel="repro/kernels/fused.py")
+    assert _rules(findings) == ["jit-control-flow"]
+    assert findings[0].line == 5
+
+
+# ---------------------------------------------------- deprecated surfaces --
+
+def test_static_policy_keyword_is_flagged():
+    findings = _lint("""
+        r = make_runner(spec, static_policy=my_policy)
+    """, rel="repro/extras/runner_glue.py")
+    assert _rules(findings) == ["deprecated-static-policy"]
+
+
+def test_int_policy_id_is_flagged():
+    findings = _lint("""
+        cfg = make_config(spec, cap, bw, policy=3)
+        cfgs = stack(spec, policies=[0, 1])
+    """, rel="repro/extras/runner_glue.py")
+    assert _rules(findings) == [
+        "deprecated-int-policy-id", "deprecated-int-policy-id",
+    ]
+
+
+def test_time_passed_is_flagged():
+    findings = _lint("""
+        def report(state):
+            return state.time_passed
+    """, rel="repro/extras/report.py")
+    assert _rules(findings) == ["deprecated-time-passed"]
+
+
+# ---------------------------------------------------- registry coherence --
+
+def test_entry_claiming_serving_without_implementation():
+    """A PolicyEntry whose serving_factory builds an object that never
+    overrides ServingPolicy.victim_key is a finding, not a runtime
+    NotImplementedError mid-sweep."""
+    from repro.serving.policy_driver import ServingPolicy
+
+    class Hollow(ServingPolicy):
+        name = "bogus"
+
+    entry = PolicyEntry(name="bogus", summary="claims serving, does not",
+                        serving_factory=Hollow)
+    findings = check_registry({"bogus": entry})
+    assert len(findings) == 1
+    assert "victim_key" in findings[0].message
+
+
+def test_entry_with_mislabeled_array_policy():
+    from repro.core.array_sim.policies import ArrayPolicy
+
+    class Mislabeled(ArrayPolicy):
+        name = "other"
+
+        def score_victims(self, state, ctx):
+            return state.last_used
+
+    entry = PolicyEntry(name="bogus", summary="name mismatch",
+                        array_factory=Mislabeled, array_id=99)
+    findings = check_registry({"bogus": entry})
+    assert len(findings) == 1
+    assert "reports name" in findings[0].message
+
+
+# ------------------------------------------------------------------- CLI --
+
+def test_cli_check_reports_seeded_violation(tmp_path):
+    """`python -m repro.analysis --check --root <bad tree>` exits nonzero
+    with a file:line finding and a JSON artifact; the shipped tree (the
+    default root) is covered by test_shipped_tree_is_clean + CI."""
+    bad = tmp_path / "kernels"
+    bad.mkdir()
+    (bad / "bad_kernel.py").write_text(
+        "def k(x):\n    return float(x)\n", encoding="utf-8")
+    out = tmp_path / "findings.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--check", "--no-registry",
+         "--root", str(tmp_path), "--json", str(out)],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "bad_kernel.py:2" in proc.stdout
+    assert "jit-coercion" in proc.stdout
+    payload = json.loads(out.read_text())
+    assert payload["count"] == 1
+    assert payload["findings"][0]["rule"] == "jit-coercion"
+
+
+# ----------------------------------------- trace counting / sanitize mode --
+
+def _tiny_point():
+    db = make_lineitem_db(scale_tuples=2_000_000)
+    streams = micro_streams(db, n_streams=2, queries_per_stream=1, seed=3)
+    spec = build_spec(db, streams)
+    cap = 16 << 20
+    return spec, cap
+
+
+@pytest.mark.parametrize("stepper", ["fixed", "horizon"])
+def test_one_trace_per_runner_across_all_policies(stepper):
+    """The recompile contract: one runner serves every registered array
+    policy (the policy id is a traced leaf) with exactly ONE jit trace —
+    a retrace on a policy switch would mean a static leak in the step."""
+    from repro.core import policy_registry
+
+    spec, cap = _tiny_point()
+    runner = make_runner(spec, bandwidth_ref=700e6, time_slice=0.01,
+                         stepper=stepper)
+    assert runner.trace_count() == 0
+    for pol in policy_registry.names(backend="array"):
+        state = runner(make_config(spec, cap, 700e6, pol))
+        res = result_from_state(state, pol, dt_ref=runner.dt_ref)
+        assert not res.extras["truncated"], (stepper, pol)
+    assert runner.trace_count() == 1, (
+        f"{stepper}: {runner.trace_count()} traces across the policy sweep")
+    # same shapes/dtypes again: still no retrace
+    runner(make_config(spec, cap, 700e6, "lru"))
+    assert runner.trace_count() == 1
+
+
+def test_sanitize_runner_passes_and_counts_one_trace():
+    spec, cap = _tiny_point()
+    runner = make_runner(spec, bandwidth_ref=700e6, time_slice=0.01,
+                         sanitize=True)
+    state = runner(make_config(spec, cap, 700e6, "pbm"))
+    res = result_from_state(state, "pbm", dt_ref=runner.dt_ref)
+    assert not res.extras["truncated"]
+    assert runner.sanitize is True
+    assert runner.trace_count() == 1
+
+
+def test_sanitize_retrace_is_a_hard_error():
+    """Changing a leaf dtype forces a second trace of the same runner —
+    under sanitize=True that is a RuntimeError, not a silent recompile."""
+    spec, cap = _tiny_point()
+    runner = make_runner(spec, bandwidth_ref=700e6, time_slice=0.01,
+                         sanitize=True)
+    cfg = make_config(spec, cap, 700e6, "lru")
+    runner(cfg)
+    assert runner.trace_count() == 1
+    retraced = cfg._replace(capacity_bytes=jnp.int32(cap))
+    with pytest.raises(RuntimeError, match="jit traces for one runner"):
+        runner(retraced)
+
+
+def test_sanitize_rejects_mesh():
+    spec, _ = _tiny_point()
+    with pytest.raises(ValueError, match="sanitize"):
+        make_runner(spec, bandwidth_ref=700e6, time_slice=0.01,
+                    sanitize=True, mesh=object())

@@ -174,7 +174,7 @@ def test_engine_completes_under_every_registry_policy():
     for name in policy_registry.names(backend="serving"):
         pool = PagePool(n_pages=20, page_size=8, page_bytes=128)
         eng = ServingEngine(pool, _stub, policy=name, max_batch=4)
-        for i in range(8):
+        for _ in range(8):
             eng.submit(Request(prompt=list(range(12)), max_new_tokens=24))
         eng.run_to_completion(max_steps=5_000)
         assert len(eng.finished) == 8, name

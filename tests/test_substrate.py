@@ -82,7 +82,7 @@ def _mk_engine(policy="pbm", pool_pages=32, page_size=16):
 
 def test_engine_completes_all_requests():
     pool, eng = _mk_engine()
-    for i in range(10):
+    for _ in range(10):
         eng.submit(Request(prompt=list(range(40)), max_new_tokens=20))
     st_ = eng.run_to_completion(max_steps=5000)
     assert len(eng.finished) == 10
@@ -102,7 +102,7 @@ def test_prefix_pages_shared_across_requests():
 
 def test_swap_accounting_and_pool_invariants():
     pool, eng = _mk_engine(policy="opt", pool_pages=24)
-    for i in range(12):
+    for _ in range(12):
         eng.submit(Request(prompt=list(range(24)), max_new_tokens=60))
     st_ = eng.run_to_completion(max_steps=10_000)
     assert len(eng.finished) == 12

@@ -132,7 +132,8 @@ def test_dryrun_artifacts_exist_and_pass():
         pytest.skip("dry-run artifacts not generated yet")
     by_mesh = {"pod": [], "multipod": []}
     for f in files:
-        rec = json.load(open(f))
+        with open(f) as fh:
+            rec = json.load(fh)
         by_mesh[rec["mesh"]].append(rec)
     for mesh, recs in by_mesh.items():
         assert len(recs) == 40, (mesh, len(recs))
