@@ -33,6 +33,14 @@ ARRAY_POLICIES = policy_names(backend="array")
 DEFAULTS = dict(n_streams=8, queries=16, bandwidth=700e6, buffer_frac=0.4, seed=3)
 
 
+def _manifest(**extra) -> Dict:
+    """RunManifest for one batch of rows (computed once, shared by
+    reference — json serialises it per row, which is the contract:
+    every benchmark JSON row is attributable on its own)."""
+    from repro.obs import manifest as _m
+    return _m.collect(**extra)
+
+
 def one_point(db, ws, policies, *, n_streams, queries, bandwidth, buffer_frac,
               seed, fraction=None, time_slice=0.1) -> List[Dict]:
     streams = micro_streams(db, n_streams=n_streams, queries_per_stream=queries,
@@ -96,6 +104,7 @@ def sweep(which: str, policies: List[str], scale: float = 1.0, seed: int = 3):
         for r in rows:
             r["sweep"] = which
             r["point"] = p
+            r["manifest"] = _manifest(backend="event")
         out.extend(rows)
         label = f"{p:.0%}" if which == "buffer" else (
             f"{p/1e6:.0f}MB/s" if which == "bandwidth" else f"{int(p)} streams")
@@ -162,6 +171,7 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 3,
         streams, spec, runners = spec_cache[skey]
         cap = max(1 << 22, int(kw["buffer_frac"] * ws))
         rows = []
+        manifest = _manifest(spec=spec, stepper=stepper, backend="array")
         for pol in policies:
             r = run_workload_array(
                 db, streams, pol, capacity_bytes=cap,
@@ -180,6 +190,8 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 3,
                 "macro_steps": r.extras.get("macro_steps", r.steps),
                 "skipped_time": r.extras.get("skipped_time", 0.0),
                 "truncated": r.extras.get("truncated", False),
+                "manifest": dict(manifest,
+                                 trace_count=runners[pol].trace_count()),
             })
         out.extend(rows)
         label = f"{p:.0%}" if which == "buffer" else (
@@ -243,6 +255,20 @@ def batched_buffer_race(scale: float = 1.0, seed: int = 3,
         result_from_state(jax.tree.map(lambda x, i=i: x[i], states), policy)
         for i in range(len(fracs))
     ]
+    # telemetry pass: a SEPARATE runner so the timed race above stays the
+    # bare program (the knob is static — the timed runner's jaxpr never
+    # carries counters); hit rates and per-lane eviction counts come from
+    # this one extra vmapped run
+    from repro.obs import counters as obs_counters
+    runner_t = make_runner(spec, bandwidth_ref=700e6, time_slice=time_slice,
+                           policies=(policy,), step_pages=2.0, telemetry=True)
+    _, tele = jax.block_until_ready(jax.jit(jax.vmap(runner_t))(cfgs))
+    tele_rows = [
+        obs_counters.summarize(obs_counters.lane_slice(tele, i),
+                               policies=runner_t.policy_names,
+                               steps=results[i].steps)
+        for i in range(len(fracs))
+    ]
     # a lane cut short by the max_time livelock guard would report its
     # stream times as complete and its spin time as wall-clock — flag it
     # so the CI trend metric is never silently poisoned
@@ -270,6 +296,16 @@ def batched_buffer_race(scale: float = 1.0, seed: int = 3,
         "truncated_fracs": truncated,
         "array_avg_stream_time_s": [round(r.avg_stream_time, 3) for r in results],
         "event_avg_stream_time_s": [round(r.avg_stream_time, 3) for r in ev_rows],
+        "macro_steps": [int(r.extras.get("macro_steps", r.steps))
+                        for r in results],
+        "skipped_time_s": [round(float(r.extras.get("skipped_time", 0.0)), 3)
+                           for r in results],
+        "hit_rate": [t["hit_rate"] for t in tele_rows],
+        "array_evictions": [t["evictions"] for t in tele_rows],
+        "event_evictions": [r.total_evictions for r in ev_rows],
+        "telemetry": tele_rows,
+        "manifest": _manifest(spec=spec, runner=runner, stepper="horizon",
+                              backend="race"),
     }
 
 

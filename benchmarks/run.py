@@ -75,6 +75,14 @@ def main() -> None:
 
     from benchmarks import microbench, tpch, sharing, serving_bench, data_bench
 
+    # run-level provenance: one manifest for the whole artifact directory
+    # (each row also carries its own — this one records the driver flags)
+    from repro.obs import manifest as run_manifest
+    with open(os.path.join(RESULTS_DIR, "run_manifest.json"), "w") as f:
+        json.dump(run_manifest.collect(
+            backend=args.backend, stepper=args.stepper, scale=scale,
+            smoke=args.smoke, sweeps=list(sweeps)), f, indent=2)
+
     print("# === microbenchmark (paper Figs 11-13) ===", file=sys.stderr)
     rows = []
     if args.backend == "array":

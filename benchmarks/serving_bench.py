@@ -47,8 +47,15 @@ def _pct(xs: List[float], q: float) -> float:
 def run_policy(policy: str, *, n_requests=32, pool_pages=28, page_size=16,
                prefix_len=64, share_ratio=0.5, max_batch=8,
                arrival_interval=2, gen_lo=16, gen_hi=160, seed=1,
-               sweep: str = "default", point: str = "default") -> Dict:
-    """One policy at one operating point under timed arrivals."""
+               sweep: str = "default", point: str = "default",
+               record_events: bool = False,
+               events_out: Optional[List] = None) -> Dict:
+    """One policy at one operating point under timed arrivals.
+
+    ``record_events=True`` turns on the engine's structured scheduler
+    events (admit/preempt/resume/prefetch with the policy verdict);
+    they are appended to ``events_out`` so ``--trace`` can render a
+    Perfetto track of the run."""
     # resolve through the registry FIRST: unknown or non-serving names die
     # here with the registered list, not deep inside the engine
     policy_registry.serving_policy(policy)
@@ -60,7 +67,8 @@ def run_policy(policy: str, *, n_requests=32, pool_pages=28, page_size=16,
     def step_fn(reqs):
         return [int((r.kv.length * 2654435761) % 50000) for r in reqs]
 
-    eng = ServingEngine(pool, step_fn, policy=policy, max_batch=max_batch)
+    eng = ServingEngine(pool, step_fn, policy=policy, max_batch=max_batch,
+                        record_events=record_events)
     rng = np.random.default_rng(seed)
     common = list(range(prefix_len))  # shared system prompt
     lengths = rng.integers(gen_lo, gen_hi, n_requests)
@@ -82,9 +90,13 @@ def run_policy(policy: str, *, n_requests=32, pool_pages=28, page_size=16,
         eng.step()
     st = eng.stats
     done = eng.finished
+    if events_out is not None:
+        events_out.extend(eng.events)
     ttft = [r.first_token_step - r.arrival_step for r in done]
     completion = [r.done_step - r.arrival_step for r in done]
+    from repro.obs import manifest as _manifest
     return {
+        "manifest": _manifest.collect(backend="serving"),
         "sweep": sweep,
         "point": point,
         "policy": policy,
@@ -140,11 +152,27 @@ def main() -> None:
                     help="pool_pages axis only (CI lane)")
     ap.add_argument("--requests", type=int, default=None,
                     help="override n_requests on every point")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="also run the default point with scheduler-event "
+                         "recording on and write a Perfetto (chrome://"
+                         "tracing) JSON of admit/preempt/resume/prefetch")
     args = ap.parse_args()
     policies = [args.policy] if args.policy else names
     if args.requests is not None:
         DEFAULT_POINT["n_requests"] = args.requests
     rows = sweep(policies, smoke=args.smoke)
+    if args.trace:
+        from repro.obs.trace import serving_events_to_chrome
+        events: List[Dict] = []
+        pol = args.policy or "pbm"
+        row = run_policy(pol, record_events=True, events_out=events,
+                         **DEFAULT_POINT)
+        with open(args.trace, "w") as f:
+            json.dump(serving_events_to_chrome(
+                events, label=f"serving[{pol}]"), f)
+        print(f"  wrote {args.trace}: {len(events)} scheduler events "
+              f"({row['preemptions']} preemptions, "
+              f"{row['resumes']} resumes)")
     for r in rows:
         print(f"  serve/{r['sweep']}={r['point']:>7s} {r['policy']:6s} "
               f"p95gap={r['p95_token_gap']:6.2f} "

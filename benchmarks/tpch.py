@@ -181,7 +181,7 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7,
     points = SWEEP_POINTS[which]
     out: List[Dict] = []
 
-    def rows_from(states, lanes, batch_wall, dt_ref):
+    def rows_from(states, lanes, batch_wall, dt_ref, man=None):
         # wall_s is the batch wall amortised per lane — the lanes run
         # LOCKSTEP inside one vmapped call, so no per-lane wall exists
         # (unlike the sequential micro array rows); batch_wall_s/
@@ -205,6 +205,7 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7,
                 "macro_steps": r.extras.get("macro_steps", r.steps),
                 "skipped_time": r.extras.get("skipped_time", 0.0),
                 "truncated": r.extras.get("truncated", False),
+                "manifest": man,
             })
         return rows
 
@@ -217,7 +218,10 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7,
         batched = runner if m is not None else jax.jit(jax.vmap(runner))
         t0 = time.time()
         states = jax.block_until_ready(batched(stack_configs(cfgs)))
-        return states, time.time() - t0, runner.dt_ref
+        wall = time.time() - t0
+        from repro.obs import manifest as _m
+        man = _m.collect(spec=spec, runner=runner, backend="array")
+        return states, wall, runner.dt_ref, man
 
     if which in ("buffer", "bandwidth"):
         streams = tpch_streams(db, n_streams=DEFAULTS["n_streams"], seed=seed)
@@ -231,8 +235,8 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7,
             for pol in policies:
                 lanes.append((p, pol))
                 cfgs.append(make_config(spec, cap, bw, pol))
-        states, wall, dt_ref = run_lanes(spec, cfgs)
-        out = rows_from(states, lanes, wall, dt_ref)
+        states, wall, dt_ref, man = run_lanes(spec, cfgs)
+        out = rows_from(states, lanes, wall, dt_ref, man)
     else:
         for p in points:
             n_s = int(p)
@@ -243,8 +247,8 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7,
             lanes = [(p, pol) for pol in policies]
             cfgs = [make_config(spec, cap, DEFAULTS["bandwidth"], pol)
                     for pol in policies]
-            states, wall, dt_ref = run_lanes(spec, cfgs)
-            out.extend(rows_from(states, lanes, wall, dt_ref))
+            states, wall, dt_ref, man = run_lanes(spec, cfgs)
+            out.extend(rows_from(states, lanes, wall, dt_ref, man))
 
     truncated = [(r["point"], r["policy"]) for r in out if r["truncated"]]
     if truncated:
@@ -348,6 +352,29 @@ def batched_tpch_race(scale: float = 1.0, seed: int = 7, fracs=None,
             flush=True,
         )
 
+    # telemetry pass on the default (horizon) lane: a separate static
+    # telemetry=True runner so neither timed lane above carries counters;
+    # plain vmap (no mesh) — one extra compile, the numbers not the wall
+    # matter here
+    from repro.obs import counters as obs_counters
+    from repro.obs import manifest as _m
+    runner_t = make_runner(spec, bandwidth_ref=DEFAULTS["bandwidth"],
+                           time_slice=time_slice, policies=(policy,),
+                           step_pages=2.0, stepper="horizon", telemetry=True)
+    states_t, tele = jax.block_until_ready(jax.jit(jax.vmap(runner_t))(cfgs))
+    tele_rows = []
+    for i in range(len(fracs)):
+        r_t = result_from_state(
+            jax.tree.map(lambda x, i=i: x[i], states_t), policy,
+            dt_ref=runner_t.dt_ref)
+        tele_rows.append(obs_counters.summarize(
+            obs_counters.lane_slice(tele, i),
+            policies=runner_t.policy_names, steps=r_t.steps))
+    steppers["horizon"]["hit_rate"] = [t["hit_rate"] for t in tele_rows]
+    steppers["horizon"]["array_evictions"] = [t["evictions"]
+                                              for t in tele_rows]
+    steppers["horizon"]["telemetry"] = tele_rows
+
     fixed, hor = steppers["fixed"], steppers["horizon"]
     ratio = {
         # per-backend/stepper wall-clock ratios vs the sequential event
@@ -375,6 +402,13 @@ def batched_tpch_race(scale: float = 1.0, seed: int = 7, fracs=None,
         "array_avg_stream_time_s": hor["avg_stream_time_s"],
         "event_avg_stream_time_s": [round(r.avg_stream_time, 3)
                                     for r in ev_rows],
+        "macro_steps": hor["macro_steps"],
+        "skipped_time_s": hor["skipped_time_s"],
+        "hit_rate": hor["hit_rate"],
+        "array_evictions": hor["array_evictions"],
+        "event_evictions": [r.total_evictions for r in ev_rows],
+        "manifest": _m.collect(spec=spec, runner=runner_t,
+                               backend="race", workload="tpch"),
     }
 
 

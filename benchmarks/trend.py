@@ -67,7 +67,12 @@ def _race_section(prev_dir: str, cur_dir: str, fname: str) -> List[str]:
     each write their own).  Races carrying the per-backend/stepper
     ``speedup_ratio`` map (PR 5+) get one row per ratio, and a current
     ratio more than 20% below the previous run's is flagged as a
-    REGRESSION."""
+    REGRESSION.  Races carrying telemetry (PR 8) additionally diff the
+    horizon lane's macro-step total (a >20% increase flags — more steps
+    for the same workload means the time engine jumped less), skipped
+    time, and the counter-derived hit rates / eviction counts; the
+    manifest line makes the comparison attributable (which sha, which
+    jax)."""
     def _load_dict(path):
         try:
             with open(path) as f:
@@ -102,21 +107,63 @@ def _race_section(prev_dir: str, cur_dir: str, fname: str) -> List[str]:
             f"| speedup_ratio.{key} | {c} | "
             f"{p if p is not None else 'n/a'} | {_fmt_delta(c, p)}{flag} |"
         )
+    def _total(d, key):
+        v = d.get(key)
+        if isinstance(v, list) and v \
+                and all(isinstance(x, (int, float)) for x in v):
+            return round(sum(v), 3)
+        return None
+
+    c_ms, p_ms = _total(cur, "macro_steps"), _total(pv, "macro_steps")
+    if c_ms is not None:
+        flag = ""
+        if isinstance(p_ms, (int, float)) and p_ms > 0 and c_ms > 1.2 * p_ms:
+            flag = " ⚠️ REGRESSION"
+            regressions.append("macro_steps")
+        lines.append(f"| macro_steps (total) | {c_ms} | "
+                     f"{p_ms if p_ms is not None else 'n/a'} | "
+                     f"{_fmt_delta(c_ms, p_ms)}{flag} |")
+    c_sk, p_sk = _total(cur, "skipped_time_s"), _total(pv, "skipped_time_s")
+    if c_sk is not None:
+        lines.append(f"| skipped_time_s (total) | {c_sk} | "
+                     f"{p_sk if p_sk is not None else 'n/a'} | "
+                     f"{_fmt_delta(c_sk, p_sk)} |")
+    if cur.get("hit_rate"):
+        lines.append(f"| hit_rate (per frac) | {cur['hit_rate']} | "
+                     f"{pv.get('hit_rate', 'n/a')} | |")
+    if cur.get("array_evictions") is not None:
+        lines.append(f"| evictions array/event | {cur['array_evictions']} / "
+                     f"{cur.get('event_evictions')} | "
+                     f"{pv.get('array_evictions', 'n/a')} / "
+                     f"{pv.get('event_evictions', 'n/a')} | |")
     if cur.get("truncated_fracs"):
         lines.append(f"| truncated lanes | {cur['truncated_fracs']} | | |")
     if regressions:
         lines.append("")
-        lines.append(f"**⚠️ wall-clock regression >20% in {fname}: "
+        lines.append(f"**⚠️ regression >20% in {fname}: "
                      f"{', '.join(regressions)}**")
+    cm = cur.get("manifest") or {}
+    pm = pv.get("manifest") or {}
+    if cm:
+        attr = (f"_current: sha `{cm.get('git_sha')}` jax {cm.get('jax')} "
+                f"spec `{cm.get('spec_hash', '?')}`")
+        if pm:
+            attr += (f" · previous: sha `{pm.get('git_sha')}` "
+                     f"jax {pm.get('jax')}")
+        lines.append("")
+        lines.append(attr + "_")
     lines.append("")
     return lines
 
 
 def _serving_section(prev_dir: str, cur_dir: str) -> List[str]:
-    """Serving-tier trend: p95 token latency and swap traffic per
-    (sweep, point, policy) from the concurrent-load harness.  A current
-    p95 token gap more than 20% above the previous run's is flagged as a
-    REGRESSION — the serving analogue of the races' wall-clock flag."""
+    """Serving-tier trend: p95 token latency, swap traffic, preemptions
+    and prefetched resumes per (sweep, point, policy) from the
+    concurrent-load harness.  A current p95 token gap more than 20% above
+    the previous run's is flagged as a REGRESSION — the serving analogue
+    of the races' wall-clock flag.  The preemption/prefetch columns were
+    collected since PR 6 but dropped before the diff; they are the
+    scheduler-churn context a p95 move needs to be readable."""
     cur = _index(_load_rows(os.path.join(cur_dir, SERVING_FILE)))
     if not cur:
         return []
@@ -127,16 +174,18 @@ def _serving_section(prev_dir: str, cur_dir: str) -> List[str]:
         lines.append("")
         return lines
     lines.append("| sweep | point | policy | p95 token gap | Δ p95 | "
-                 "swap (GB) | Δ swap |")
-    lines.append("|---|---|---|---|---|---|---|")
+                 "swap (GB) | Δ swap | preempt | Δ preempt | "
+                 "prefetch-resume | Δ |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|---|")
     regressions = []
     for key in sorted(cur.keys(), key=str):
         c = cur[key]
         p = prev.get(key)
         gap, swap = c.get("p95_token_gap"), c.get("swap_gb")
+        pre, pref = c.get("preemptions"), c.get("prefetched_resumes")
         if p is None:
             lines.append(f"| {key[0]} | {key[1]} | {key[2]} | {gap} | new | "
-                         f"{swap} | new |")
+                         f"{swap} | new | {pre} | new | {pref} | new |")
             continue
         pgap = p.get("p95_token_gap")
         flag = ""
@@ -147,7 +196,9 @@ def _serving_section(prev_dir: str, cur_dir: str) -> List[str]:
         lines.append(
             f"| {key[0]} | {key[1]} | {key[2]} | {gap} | "
             f"{_fmt_delta(gap, pgap)}{flag} | "
-            f"{swap} | {_fmt_delta(swap, p.get('swap_gb'))} |"
+            f"{swap} | {_fmt_delta(swap, p.get('swap_gb'))} | "
+            f"{pre} | {_fmt_delta(pre, p.get('preemptions'))} | "
+            f"{pref} | {_fmt_delta(pref, p.get('prefetched_resumes'))} |"
         )
     if regressions:
         lines.append("")

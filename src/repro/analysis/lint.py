@@ -18,6 +18,9 @@ Traced regions (where the jit rules apply)
 * every function in ``repro/core/array_sim/policies.py`` and
   ``repro/core/array_sim/coop.py`` (policy hooks and the cooperative
   substrate are called from inside the traced step);
+* every function in ``repro/obs/counters.py`` (the telemetry helpers
+  accumulate counters inside the traced step — they must stay pure
+  ``jnp``; the host-side summarisers carry ``# analysis: host``);
 * the *nested* functions of ``make_step`` / ``make_runner`` in
   ``repro/core/array_sim/sim.py`` (the enclosing bodies are host-side
   step *builders*: their ``float()``/numpy use is trace-time constant
@@ -28,6 +31,18 @@ host-side helper out (e.g. ``coop.chunk_geometry``, the compiler-time
 geometry builder); ``# analysis: traced`` opts extra functions in —
 used for ``sim._u01`` / ``sim.init_state``, which are module-level but
 called from inside the traced step.
+
+Host callbacks (rule ``jit-host-callback``)
+-------------------------------------------
+``jax.debug.print`` / ``jax.debug.callback`` / ``jax.debug.breakpoint``,
+``jax.pure_callback``, ``io_callback`` and the legacy ``host_callback``
+module are banned in traced regions outright — no taint analysis
+needed, the call itself is the bug.  They look harmless (the program
+still runs) but serialise vmapped lanes, block donated buffers and
+perturb what XLA may fuse; per-step observability belongs in the
+carry-threaded ``repro.obs`` counters instead (DESIGN.md §8).  A
+deliberate debugging escape is spelled ``# analysis: obs`` on the
+``def`` — it silences only this rule, the purity rules still apply.
 
 Taint model
 -----------
@@ -82,9 +97,17 @@ COERCIONS = {"float", "int", "bool"}
 MATERIALIZERS = {"item", "tolist"}
 #: builtins whose result is static structure inspection, not data
 STATIC_INSPECTORS = {"isinstance", "hasattr", "len", "callable", "getattr"}
+#: host-callback entry points banned in traced regions (rule
+#: ``jit-host-callback``): matched against the call's dotted name, so
+#: both ``jax.debug.print`` and a ``from jax import debug`` spelling hit
+HOST_CALLBACK_NAMES = (
+    "debug.print", "debug.callback", "debug.breakpoint",
+    "pure_callback", "io_callback",
+)
 
 _PRAGMA_HOST = "# analysis: host"
 _PRAGMA_TRACED = "# analysis: traced"
+_PRAGMA_OBS = "# analysis: obs"
 
 
 def repo_src_root() -> Path:
@@ -103,7 +126,8 @@ def _file_kind(rel: str) -> str:
     rel = _norm(rel)
     if "/kernels/" in rel or rel.startswith("kernels/"):
         return "kernels"
-    if rel.endswith(("core/array_sim/policies.py", "core/array_sim/coop.py")):
+    if rel.endswith(("core/array_sim/policies.py", "core/array_sim/coop.py",
+                     "obs/counters.py")):
         return "traced"
     if rel.endswith("core/array_sim/sim.py"):
         return "sim"
@@ -119,6 +143,8 @@ def _pragma(src_lines: Sequence[str], node: ast.AST) -> Optional[str]:
                 return "host"
             if _PRAGMA_TRACED in text:
                 return "traced"
+            if _PRAGMA_OBS in text:
+                return "obs"
     return None
 
 
@@ -194,15 +220,39 @@ def _is_host_module_call(func: ast.expr) -> Optional[str]:
     return None
 
 
+def _dotted_name(func: ast.expr) -> Optional[str]:
+    """Full dotted call name (``jax.debug.print``), or None if the root
+    is not a plain name."""
+    parts: List[str] = []
+    node = func
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_host_callback(name: str) -> bool:
+    if "host_callback" in name.split("."):
+        return True
+    return any(name == s or name.endswith("." + s)
+               for s in HOST_CALLBACK_NAMES)
+
+
 class _TracedChecker(ast.NodeVisitor):
     """Walks ONE traced function body, tracking taint per name."""
 
     def __init__(self, rel: str, kind: str, findings: List[Finding],
-                 scope: _Scope):
+                 scope: _Scope, src_lines: Sequence[str] = (),
+                 allow_callbacks: bool = False):
         self.rel = rel
         self.kind = kind
         self.findings = findings
         self.scope = scope
+        self.src_lines = src_lines
+        self.allow_callbacks = allow_callbacks
 
     # ------------------------------------------------------------ helpers --
     def _emit(self, rule: str, node: ast.AST, message: str) -> None:
@@ -404,12 +454,31 @@ class _TracedChecker(ast.NodeVisitor):
                 "in as a constant — use jnp, or hoist to the static "
                 "step-builder body)",
             )
+        dotted = _dotted_name(func)
+        if dotted is not None and not self.allow_callbacks \
+                and _is_host_callback(dotted):
+            self._emit(
+                "jit-host-callback", node,
+                f"`{dotted}()` inside a jitted region: host callbacks "
+                "serialise vmapped lanes and block buffer donation — "
+                "thread a counter through the step carry instead "
+                "(repro.obs, DESIGN.md §8), or mark a deliberate "
+                "debugging escape with `# analysis: obs`",
+            )
         self.generic_visit(node)
 
-    # nested defs inherit the enclosing taint environment
+    # nested defs inherit the enclosing taint environment (and may carry
+    # their own pragma: `# analysis: obs` scopes the callback escape to
+    # exactly one nested def)
     def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
-        _check_traced_function(node, self.rel, self.kind, self.findings,
-                               parent=self.scope)
+        prag = _pragma(self.src_lines, node)
+        if prag == "host":
+            return
+        _check_traced_function(
+            node, self.rel, self.kind, self.findings, parent=self.scope,
+            src_lines=self.src_lines,
+            allow_callbacks=self.allow_callbacks or prag == "obs",
+        )
 
     visit_AsyncFunctionDef = visit_FunctionDef
 
@@ -417,13 +486,16 @@ class _TracedChecker(ast.NodeVisitor):
         scope = _Scope(self.scope)
         for a in node.args.args + node.args.kwonlyargs:
             scope.set(a.arg, True)
-        sub = _TracedChecker(self.rel, self.kind, self.findings, scope)
+        sub = _TracedChecker(self.rel, self.kind, self.findings, scope,
+                             self.src_lines, self.allow_callbacks)
         sub.visit(node.body)
 
 
 def _check_traced_function(fn: ast.FunctionDef, rel: str, kind: str,
                            findings: List[Finding],
-                           parent: Optional[_Scope] = None) -> None:
+                           parent: Optional[_Scope] = None,
+                           src_lines: Sequence[str] = (),
+                           allow_callbacks: bool = False) -> None:
     scope = _Scope(parent)
     static = _static_params(fn, kind)
     args = fn.args
@@ -434,7 +506,8 @@ def _check_traced_function(fn: ast.FunctionDef, rel: str, kind: str,
         scope.set(args.vararg.arg, True, container=True)
     if args.kwarg is not None:
         scope.set(args.kwarg.arg, True, container=True)
-    checker = _TracedChecker(rel, kind, findings, scope)
+    checker = _TracedChecker(rel, kind, findings, scope, src_lines,
+                             allow_callbacks)
     for stmt in fn.body:
         checker.visit(stmt)
 
@@ -542,17 +615,27 @@ def lint_source(source: str, rel: str) -> List[Finding]:
     kind = _file_kind(rel)
     if kind in ("kernels", "traced"):
         for fn in _walk_defs(tree.body):
-            if _pragma(src_lines, fn) != "host":
-                _check_traced_function(fn, rel, kind, findings)
+            prag = _pragma(src_lines, fn)
+            if prag != "host":
+                _check_traced_function(
+                    fn, rel, kind, findings, src_lines=src_lines,
+                    allow_callbacks=(prag == "obs"))
     elif kind == "sim":
         for fn in _walk_defs(tree.body):
-            if _pragma(src_lines, fn) == "traced":
-                _check_traced_function(fn, rel, kind, findings)
+            prag = _pragma(src_lines, fn)
+            if prag == "traced":
+                _check_traced_function(fn, rel, kind, findings,
+                                       src_lines=src_lines)
             elif fn.name in _SIM_BUILDERS:
                 for sub in fn.body:
                     if isinstance(sub, (ast.FunctionDef,
                                         ast.AsyncFunctionDef)):
-                        _check_traced_function(sub, rel, kind, findings)
+                        sp = _pragma(src_lines, sub)
+                        if sp == "host":
+                            continue
+                        _check_traced_function(
+                            sub, rel, kind, findings, src_lines=src_lines,
+                            allow_callbacks=(sp == "obs"))
     return findings
 
 

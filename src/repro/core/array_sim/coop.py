@@ -123,6 +123,13 @@ def init_coop_state(spec) -> CoopState:
     )
 
 
+def chunk_pick(prev_inflight, new_inflight):
+    """Did the I/O server switch to loading a NEW chunk this step?  The
+    obs tier's CScan chunk-pick signal (``Telemetry.chunk_picks``): both
+    args are the scalar inflight chunk id, ``-1`` = idle."""
+    return (new_inflight >= 0) & (new_inflight != prev_inflight)
+
+
 def _interest(cc: CoopConsts, active, start, end, q_tab, done):
     """(S, CH) pending interest + per-(stream, chunk) tuple overlap: a
     scan is interested in every not-yet-consumed chunk of its table that

@@ -315,6 +315,20 @@ class ArrayPolicy:
         the consuming chunk's completion)."""
         return None  # noqa: RET501  (hook contract: explicit None means no clock)
 
+    def observe_init(self, spec):
+        """Zeros prototype of this policy's telemetry row (``None`` =
+        no policy-specific counters).  Only consulted when the runner
+        is built with ``telemetry=True`` (``repro.obs``); the row is a
+        fixed-shape f32 vector the step accumulates per step."""
+        return None  # noqa: RET501  (hook contract: None means no row)
+
+    def observe(self, pstate, ctx: StepCtx):
+        """Telemetry row for this step, same shape as
+        :meth:`observe_init` — pure ``jnp``, added into the carried
+        ``Telemetry.pol_obs`` entry (lanes running another policy are
+        masked out by the step)."""
+        return None  # noqa: RET501
+
     def __repr__(self) -> str:  # pragma: no cover
         return f"{type(self).__name__}({self.name})"
 
@@ -341,6 +355,17 @@ class ArrayLRU(ArrayPolicy):
 
     def score_victims(self, pstate, ctx: StepCtx) -> jax.Array:
         return _lru_age(ctx)
+
+    def observe_init(self, spec):
+        # [resident-page age mass (s), resident-page count] per step:
+        # mean resident age = row[0] / row[1] over the run
+        return jnp.zeros(2, jnp.float32)
+
+    def observe(self, pstate, ctx: StepCtx):
+        res = ctx.resident & ctx.page_valid
+        age = jnp.where(res, _lru_age(ctx), 0.0)
+        return jnp.stack([jnp.sum(age),
+                          jnp.sum(res).astype(jnp.float32)])
 
 
 class ArrayPBM(ArrayPolicy):
@@ -426,6 +451,18 @@ class ArrayPBM(ArrayPolicy):
         tb = jnp.where(bucket == nb, age / (age + 1.0), tie)
         return bucket.astype(jnp.float32) + 0.5 * tb
 
+    def observe_init(self, spec):
+        # resident-page occupancy per timeline bucket (paper Fig. 10),
+        # step-integrated; the last slot is the not-requested level
+        return jnp.zeros(spec.nb + 1, jnp.float32)
+
+    def observe(self, bucket, ctx: StepCtx):
+        nb = ctx.spec.nb
+        res = (ctx.resident & ctx.page_valid).astype(jnp.float32)
+        return jnp.zeros(nb + 1, jnp.float32).at[
+            jnp.clip(bucket, 0, nb)
+        ].add(res)
+
 
 class ArrayOPT(ArrayPolicy):
     """OPT / Belady on exact plan distances (paper §3, §4 "OPT simulator").
@@ -475,6 +512,20 @@ class ArrayOPT(ArrayPolicy):
     def score_victims(self, key, ctx: StepCtx) -> jax.Array:
         return key
 
+    def observe_init(self, spec):
+        # [unreferenced resident pages, referenced resident pages] per
+        # step (the oracle's two score bands — mass in the first slot
+        # means the pool holds dead pages the plans no longer want)
+        return jnp.zeros(2, jnp.float32)
+
+    def observe(self, key, ctx: StepCtx):
+        res = ctx.resident & ctx.page_valid
+        unref = res & (key >= 2.0)
+        return jnp.stack([
+            jnp.sum(unref).astype(jnp.float32),
+            jnp.sum(res & (key < 2.0)).astype(jnp.float32),
+        ])
+
 
 class ArrayCScan(ArrayPolicy):
     """Cooperative Scans' ABM as an array policy (paper §2).
@@ -513,3 +564,15 @@ class ArrayCScan(ArrayPolicy):
         # needs a fine step to run the pick loop
         from .coop import chunk_horizon
         return chunk_horizon(hz.spec, pstate, hz)
+
+    def observe_init(self, spec):
+        # [chunks-done flags summed over streams, scans consuming a
+        # chunk] per step (chunk picks themselves are counted by the
+        # step via coop.chunk_pick — they need both inflight states)
+        return jnp.zeros(2, jnp.float32)
+
+    def observe(self, pstate, ctx: StepCtx):
+        return jnp.stack([
+            jnp.sum(pstate.done.astype(jnp.float32)),
+            jnp.sum((pstate.cur_chunk >= 0).astype(jnp.float32)),
+        ])

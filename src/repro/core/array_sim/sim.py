@@ -78,6 +78,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import policy_registry
+from ...obs import counters as obs
 from . import coop as coop_mod
 from .policies import BIG_CUT, ArrayPolicy, HorizonView, StepCtx
 from .spec import SimSpec
@@ -308,7 +309,8 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
               prefetch_pages: int = 8, refresh: bool = False,
               policies: Sequence[ArrayPolicy] = ("lru", "pbm"),
               vmax: Optional[int] = None, stepper: str = "fixed",
-              h_max: float = 8.0, h_io: float = 3.0):
+              h_max: float = 8.0, h_io: float = 3.0,
+              telemetry: bool = False):
     """Build the pure ``step(carry, cfg) -> carry`` for a policy set.
 
     ``refresh=False`` is the cheap within-slice step; ``refresh=True`` is
@@ -342,6 +344,13 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
       fits inside ``h_max``.  ``h_io`` bounds
       the jump, in fine steps, while requests are pending — the
       wake-quantisation knob of the I/O-bound regime.
+
+    ``telemetry`` is the STATIC obs knob (``repro.obs``, DESIGN.md §8):
+    with it on, the step threads a :class:`~repro.obs.counters.Telemetry`
+    pytree as the LAST carry element and accumulates jit-pure counters
+    from values the step already computes; with it off (the default) the
+    carry, the compiled program, and the results are exactly the
+    pre-telemetry ones.
     """
     from repro.kernels import ops as kops
 
@@ -528,7 +537,7 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         return jnp.min(jnp.minimum(lim, cap), axis=1)       # (S,)
 
     def core(state: SimState, view: _View, win, cfg: ArraySimConfig, dt,
-             h_u, adv_lim_in=None, pend_in=None):
+             h_u, adv_lim_in=None, pend_in=None, tele=None):
         """One simulation step of length ``dt`` == ``h_u`` fine steps
         (``h_u`` is the static 1 under the fixed stepper, a traced i32
         under the horizon stepper — a macro-step stands in for ``h_u``
@@ -1083,8 +1092,57 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             churn=churn2,
             pstate=tuple(pstate2),
         )
+
+        # ============ obs tier 1: jit-pure carried counters ===============
+        # (repro.obs, DESIGN.md §8).  Every source below is a value the
+        # step computed anyway; every update goes through the pure
+        # obs.count/obs.hist helpers — the analysis lint's host-callback
+        # ban (rule jit-host-callback) keeps this the only telemetry
+        # channel inside traced regions.  ``tele is None`` is static:
+        # with telemetry off this whole block compiles to nothing.
+        if tele is None:
+            tele2 = None
+        else:
+            hits_ev = jnp.sum(crossed)
+            if has_coop:
+                hits_ev = hits_ev + jnp.sum(touched_coop)
+                picks = coop_mod.chunk_pick(
+                    cstate.inflight, coop_io.inflight
+                ) & is_coop
+            else:
+                picks = jnp.bool_(False)
+            depth = jnp.sum((req_step3 != _REQ_NONE) & page_valid)
+            # victim rank in the policy's score order (0 = top victim):
+            # double argsort of the masked score, the rank histogram's
+            # high bins = the kernel digging past the policy preference
+            vrank = jnp.argsort(jnp.argsort(
+                -jnp.where(evictable, key, -INF)
+            ))
+            pol_rows = []
+            for j, (p, ps) in enumerate(zip(policies, pstate2)):
+                row = tele.pol_obs[j]
+                if row.shape[0]:
+                    o = p.observe(ps, ctx)
+                    if n_pol > 1:
+                        o = jnp.where(pol_local == j, o, 0.0)
+                    row = row + o
+                pol_rows.append(row)
+            tele2 = tele._replace(
+                hits=obs.count(tele.hits, hits_ev),
+                misses=obs.count(tele.misses, demand_hit),
+                loads=obs.count(tele.loads, n_load),
+                evictions=obs.count(tele.evictions, evict),
+                evict_rank=obs.hist(tele.evict_rank,
+                                    obs.log2_bin(vrank + 1), evict),
+                jump_hist=obs.hist(tele.jump_hist, obs.log2_bin(h_u), 1),
+                ioq_depth_sum=obs.count(tele.ioq_depth_sum, depth),
+                ioq_depth_max=jnp.maximum(tele.ioq_depth_max, depth),
+                chunk_picks=obs.count(tele.chunk_picks, picks),
+                pol_obs=tuple(pol_rows),
+            )
+
         if not horizon:
-            return new_state, view2, None
+            return new_state, view2, None, tele2
 
         # ================= event horizon of the NEXT step =================
         # The earliest "interesting" time ahead, from the same machinery
@@ -1155,13 +1213,21 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         next_h = jnp.clip(
             jnp.floor(next_dt / dt_ref).astype(jnp.int32), 1, h_max_i
         )
-        return new_state, view2, (win2, adv_lim2, pend_bytes2, next_h)
+        return new_state, view2, (win2, adv_lim2, pend_bytes2, next_h), tele2
 
+    # telemetry rides at the END of every carry so the loop conditions'
+    # positional reads (cond: c[0]; inner_cond: c[5], c[6]) are identical
+    # with the knob on or off
     if not horizon:
         def step(carry, cfg: ArraySimConfig):
-            state, view = carry
-            new_state, view2, _ = core(state, view, window(view), cfg,
-                                       dt_ref, 1)
+            if telemetry:
+                state, view, tele = carry
+            else:
+                (state, view), tele = carry, None
+            new_state, view2, _, tele2 = core(state, view, window(view),
+                                              cfg, dt_ref, 1, tele=tele)
+            if telemetry:
+                return new_state, view2, tele2
             return new_state, view2
     elif refresh:
         def step(carry, cfg: ArraySimConfig):
@@ -1169,25 +1235,41 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             # h_max fine steps — inner_cond only hands the tail over
             # once next_h reaches it), then re-arm the slice budget of
             # n_inner fine steps
-            state, view, win, adv_lim, pend, rem_u, _next_h = carry
-            new_state, view2, (win2, adv_lim2, pend2, next_h2) = core(
+            if telemetry:
+                state, view, win, adv_lim, pend, rem_u, _next_h, tele = carry
+            else:
+                state, view, win, adv_lim, pend, rem_u, _next_h = carry
+                tele = None
+            new_state, view2, (win2, adv_lim2, pend2, next_h2), tele2 = core(
                 state, view, win, cfg,
                 rem_u.astype(jnp.float32) * dt_ref, rem_u, adv_lim, pend,
+                tele=tele,
             )
-            return (new_state, view2, win2, adv_lim2, pend2,
-                    jnp.int32(n_inner), next_h2)
+            out = (new_state, view2, win2, adv_lim2, pend2,
+                   jnp.int32(n_inner), next_h2)
+            if telemetry:
+                return (*out, tele2)
+            return out
     else:
         def step(carry, cfg: ArraySimConfig):
             # within-slice macro-step: jump to the event horizon, keeping
             # at least one fine step of slice for the refresh to absorb
-            state, view, win, adv_lim, pend, rem_u, next_h = carry
+            if telemetry:
+                state, view, win, adv_lim, pend, rem_u, next_h, tele = carry
+            else:
+                state, view, win, adv_lim, pend, rem_u, next_h = carry
+                tele = None
             h = jnp.minimum(next_h, rem_u - 1)
-            new_state, view2, (win2, adv_lim2, pend2, next_h2) = core(
+            new_state, view2, (win2, adv_lim2, pend2, next_h2), tele2 = core(
                 state, view, win, cfg,
                 h.astype(jnp.float32) * dt_ref, h, adv_lim, pend,
+                tele=tele,
             )
-            return (new_state, view2, win2, adv_lim2, pend2, rem_u - h,
-                    next_h2)
+            out = (new_state, view2, win2, adv_lim2, pend2, rem_u - h,
+                   next_h2)
+            if telemetry:
+                return (*out, tele2)
+            return out
 
     step.adv_limit = adv_limit
     step.query_view = query_view
@@ -1215,6 +1297,7 @@ def make_runner(
     h_io: float = 3.0,
     mesh=None,
     sanitize: bool = False,
+    telemetry: bool = False,
 ):
     """Jitted ``run(cfg) -> SimState``: steps until every stream finishes.
 
@@ -1270,6 +1353,13 @@ def make_runner(
     invariant is asserted in CI against the plain runners too.
     Incompatible with ``mesh`` (checkify does not compose with
     ``shard_map`` here; sanitize single lanes instead).
+
+    ``telemetry=True`` (STATIC — a different runner, not a traced leaf)
+    threads the jit-pure counter pytree of ``repro.obs`` through the
+    carry: the runner then returns ``(state, telemetry)`` instead of the
+    bare state.  Off (the default) compiles to the exact pre-telemetry
+    program — bit-equal results; on adds carry leaves but zero extra
+    traces (both are asserted in ``tests/test_obs.py``).
     """
     if static_policy is not _UNSET:
         raise TypeError(
@@ -1287,17 +1377,19 @@ def make_runner(
     dt = float(step_pages) * float(np.max(spec.page_size)) / float(bandwidth_ref)
     cheap = make_step(spec, dt, time_slice, prefetch_pages, refresh=False,
                       policies=pols, vmax=vmax, stepper=stepper,
-                      h_max=h_max, h_io=h_io)
+                      h_max=h_max, h_io=h_io, telemetry=telemetry)
     full = make_step(spec, dt, time_slice, prefetch_pages, refresh=True,
                      policies=pols, vmax=vmax, stepper=stepper,
-                     h_max=h_max, h_io=h_io)
+                     h_max=h_max, h_io=h_io, telemetry=telemetry)
 
     if stepper == "fixed":
         n_inner = max(1, int(round(time_slice / dt)))
 
-        def run(cfg: ArraySimConfig) -> SimState:
+        def run(cfg: ArraySimConfig):
             state = init_state(spec, pols)
             carry = (state, cheap.query_view(state.qidx, state.pos))
+            if telemetry:
+                carry = (*carry, obs.init_telemetry(pols, spec))
 
             def slice_body(c):
                 c = jax.lax.fori_loop(
@@ -1313,17 +1405,22 @@ def make_runner(
                     & (st.slices_done < max_slices)
                 )
 
-            return jax.lax.while_loop(cond, slice_body, carry)[0]
+            out = jax.lax.while_loop(cond, slice_body, carry)
+            if telemetry:
+                return out[0], out[-1]
+            return out[0]
     else:
         n_inner = max(1, int(round(time_slice / dt)))
 
-        def run(cfg: ArraySimConfig) -> SimState:
+        def run(cfg: ArraySimConfig):
             state = init_state(spec, pols)
             view0 = cheap.query_view(state.qidx, state.pos)
             win0 = cheap.window(view0)
             carry = (state, view0, win0,
                      cheap.adv_limit(win0, state.resident),
                      jnp.float32(0.0), jnp.int32(n_inner), jnp.int32(1))
+            if telemetry:
+                carry = (*carry, obs.init_telemetry(pols, spec))
 
             def inner_cond(c):
                 # keep macro-stepping while the slice has more than one
@@ -1346,14 +1443,17 @@ def make_runner(
                     & (st.slices_done < max_slices)
                 )
 
-            return jax.lax.while_loop(cond, slice_body, carry)[0]
+            out = jax.lax.while_loop(cond, slice_body, carry)
+            if telemetry:
+                return out[0], out[-1]
+            return out[0]
 
     # one trace per (stepper x policy-set) is a substrate invariant: the
     # counter ticks inside the traced body, so it counts TRACES, not
     # calls — a leaf changing shape/dtype between configs shows up here
     trace_counter = {"n": 0}
 
-    def counted_run(cfg: ArraySimConfig) -> SimState:
+    def counted_run(cfg: ArraySimConfig):
         trace_counter["n"] += 1
         return run(cfg)
 
@@ -1378,7 +1478,7 @@ def make_runner(
             errors=checkify.nan_checks | checkify.index_checks,
         ))
 
-        def runner(cfg: ArraySimConfig) -> SimState:
+        def runner(cfg: ArraySimConfig):
             err, state = checked(cfg)
             err.throw()
             if trace_counter["n"] > 1:
@@ -1396,6 +1496,8 @@ def make_runner(
     runner.stepper = stepper
     runner.lane_mesh = mesh
     runner.sanitize = sanitize
+    runner.telemetry = telemetry
+    runner.policy_names = tuple(p.name for p in pols)
     runner.trace_count = lambda: trace_counter["n"]
     return runner
 
@@ -1463,6 +1565,7 @@ def run_workload_array(
     runner=None,
     stepper: str = "fixed",
     sanitize: bool = False,
+    telemetry: bool = False,
 ) -> ArrayResult:
     """Array-backend counterpart of ``repro.core.run_workload`` for every
     registered array policy (lru / pbm / cscan / opt).  Accepts any
@@ -1481,10 +1584,21 @@ def run_workload_array(
                              time_slice=time_slice,
                              prefetch_pages=prefetch_pages,
                              policies=(policy_name,), stepper=stepper,
-                             sanitize=sanitize)
+                             sanitize=sanitize, telemetry=telemetry)
     cfg = make_config(spec, capacity_bytes, bandwidth, policy_name,
                       max_time=max_time)
     t0 = _time.time()
-    state = jax.block_until_ready(runner(cfg))
-    return result_from_state(state, policy_name, sim_wall=_time.time() - t0,
-                             dt_ref=getattr(runner, "dt_ref", None))
+    out = jax.block_until_ready(runner(cfg))
+    if getattr(runner, "telemetry", False):
+        state, tele = out
+    else:
+        state, tele = out, None
+    result = result_from_state(state, policy_name,
+                               sim_wall=_time.time() - t0,
+                               dt_ref=getattr(runner, "dt_ref", None))
+    if tele is not None:
+        result.extras["telemetry"] = obs.summarize(
+            tele, policies=getattr(runner, "policy_names", None),
+            steps=result.steps,
+        )
+    return result

@@ -57,6 +57,7 @@ class EngineResult:
     total_hits: int
     total_loads: int
     sim_time: float
+    total_evictions: int = 0
     sharing_samples: List[Dict[int, int]] = field(default_factory=list)
     trace: List[PageId] = field(default_factory=list)
     page_sizes: Dict[PageId, int] = field(default_factory=dict)
@@ -163,6 +164,7 @@ class Engine:
             total_hits=self.pool.total_hits,
             total_loads=self.pool.total_loads,
             sim_time=self.now,
+            total_evictions=self.pool.total_evictions,
             sharing_samples=self.sharing_samples,
             trace=self.trace,
             page_sizes=self._page_sizes,

@@ -31,6 +31,7 @@ class BufferPool:
         self.total_loaded_bytes = 0   # lifetime I/O volume (the paper metric)
         self.total_loads = 0
         self.total_hits = 0
+        self.total_evictions = 0
 
     def is_resident(self, page: Page) -> bool:
         return page.pid in self.resident
@@ -57,6 +58,7 @@ class BufferPool:
         p = self.resident.pop(page.pid, None)
         if p is not None:
             self.used_bytes -= p.size_bytes
+            self.total_evictions += 1
 
     def pin(self, page: Page) -> None:
         self.pinned[page.pid] = self.pinned.get(page.pid, 0) + 1

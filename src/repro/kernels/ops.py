@@ -95,13 +95,18 @@ def fifo_grant(key, sizes, budget, pops, *, vmax: int = 16):
     admission against ``budget`` bytes and ``pops`` pops.  Called from
     inside the already-jitted event-horizon step, so no jit wrapper;
     backend policy picks the Mosaic kernel on TPU and the jnp oracle
-    (one ``top_k`` + prefix product) elsewhere."""
-    mode = _use_pallas()
-    if mode is not False:
-        return fifo_grant_kernel(
-            key, sizes, budget, pops, vmax=vmax, interpret=(mode is None),
-        )
-    return ref.fifo_grant_ref(key, sizes, budget, pops, vmax=vmax)
+    (one ``top_k`` + prefix product) elsewhere.
+
+    The ``jax.named_scope`` span names this op in profiler traces and in
+    lowered HLO, so ``benchmarks/roofline.py --kernels`` and a Perfetto
+    capture both attribute its cost to ``kernel:fifo_grant``."""
+    with jax.named_scope("kernel:fifo_grant"):
+        mode = _use_pallas()
+        if mode is not False:
+            return fifo_grant_kernel(
+                key, sizes, budget, pops, vmax=vmax, interpret=(mode is None),
+            )
+        return ref.fifo_grant_ref(key, sizes, budget, pops, vmax=vmax)
 
 
 def batched_evict(key, sizes, evictable, need_free, *, vmax: int = 64):
@@ -113,16 +118,20 @@ def batched_evict(key, sizes, evictable, need_free, *, vmax: int = 64):
     Called from inside the already-jitted ``array_sim`` step, so no jit
     wrapper here; backend policy picks the Mosaic kernel on TPU and the
     jnp oracle elsewhere (the oracle is itself fully vectorised).
+
+    Wrapped in a ``jax.named_scope`` span so profiler traces and
+    ``roofline.py --kernels`` attribute it as ``kernel:batched_evict``.
     """
-    mode = _use_pallas()
-    if mode is not False:
-        return batched_evict_kernel(
-            key, sizes, evictable, need_free,
-            vmax=vmax, interpret=(mode is None),
+    with jax.named_scope("kernel:batched_evict"):
+        mode = _use_pallas()
+        if mode is not False:
+            return batched_evict_kernel(
+                key, sizes, evictable, need_free,
+                vmax=vmax, interpret=(mode is None),
+            )
+        return ref.batched_evict_ref(
+            key, sizes, evictable, need_free, vmax=vmax,
         )
-    return ref.batched_evict_ref(
-        key, sizes, evictable, need_free, vmax=vmax,
-    )
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

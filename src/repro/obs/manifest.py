@@ -1,0 +1,85 @@
+"""Run provenance: the :class:`RunManifest` stamped onto benchmark rows.
+
+``trend.py`` diffs benchmark JSONs across CI runs; a regression flag is
+only actionable if the two rows are *attributable* — same code? same
+jax? same compiled workload?  The manifest answers that: git sha,
+jax/jaxlib versions, a content hash of the SimSpec arrays, the time
+engine and sanitize mode of the runner, its trace count, and (when the
+run collected one) the telemetry summary.  Everything here runs on the
+host after the jitted run — nothing touches a traced region.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import platform
+import subprocess
+import sys
+from typing import Optional
+
+import numpy as np
+
+_GIT_SHA: Optional[str] = None
+
+
+def git_sha() -> str:
+    """Current commit sha (cached; ``"unknown"`` outside a checkout)."""
+    global _GIT_SHA
+    if _GIT_SHA is None:
+        try:
+            _GIT_SHA = subprocess.run(
+                ["git", "rev-parse", "--short=12", "HEAD"],
+                capture_output=True, text=True, timeout=10, check=True,
+            ).stdout.strip() or "unknown"
+        except Exception:
+            _GIT_SHA = "unknown"
+    return _GIT_SHA
+
+
+def spec_hash(spec) -> str:
+    """Content hash of a :class:`SimSpec` (12 hex chars): the arrays and
+    static dims that define the compiled workload.  Two runs with equal
+    hashes stepped the same machine."""
+    h = hashlib.sha1()
+    for name, v in sorted(spec._asdict().items()):
+        h.update(name.encode())
+        if isinstance(v, np.ndarray):
+            h.update(v.tobytes())
+        else:
+            h.update(repr(v).encode())
+    return h.hexdigest()[:12]
+
+
+def collect(*, spec=None, runner=None, stepper: Optional[str] = None,
+            sanitize: Optional[bool] = None, telemetry: Optional[dict] = None,
+            **extra) -> dict:
+    """Build one manifest dict.  ``runner`` (a ``make_runner`` product)
+    contributes its stepper/sanitize/trace_count; explicit keywords win;
+    ``extra`` keys pass through for harness-specific context."""
+    import jax
+    import jaxlib
+
+    if runner is not None:
+        if stepper is None:
+            stepper = getattr(runner, "stepper", None)
+        if sanitize is None:
+            sanitize = getattr(runner, "sanitize", None)
+    man = {
+        "git_sha": git_sha(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "platform": sys.platform,
+    }
+    if spec is not None:
+        man["spec_hash"] = spec_hash(spec)
+    if stepper is not None:
+        man["stepper"] = stepper
+    if sanitize is not None:
+        man["sanitize"] = bool(sanitize)
+    if runner is not None and hasattr(runner, "trace_count"):
+        man["trace_count"] = runner.trace_count()
+    if telemetry is not None:
+        man["telemetry"] = telemetry
+    man.update(extra)
+    return man

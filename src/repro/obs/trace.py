@@ -1,0 +1,250 @@
+"""Flight recorder: host-side macro-step traces in Chrome/Perfetto JSON.
+
+The carried counters (:mod:`repro.obs.counters`) answer *how much*; the
+flight recorder answers *when*.  A :class:`TraceSession` drives the SAME
+compiled step functions the runner uses (``make_step`` cheap + refresh,
+each jitted once), but moves the loop nest to the host so every
+macro-step boundary is observable: per step it records the jump reason
+(``fine`` / ``jump`` / ``refresh``), the simulated interval, grants,
+evictions (residency diff — the ground truth the eviction counter must
+agree with), and the pending request-queue depth.  ``to_chrome()``
+serialises the records as a Chrome ``traceEvents`` JSON that Perfetto
+(https://ui.perfetto.dev) renders directly: one duration track of
+macro-steps plus counter tracks for queue depth and pool occupancy.
+
+This is the diagnostic tier — one lane, host-looped, device-synced per
+macro-step — NOT the sweep tier.  Results are step-for-step identical
+to the jitted runner (same compiled ``core``, same carry threading; the
+host merely evaluates the loop conditions the runner's ``while_loop``
+evaluates on device), which is what lets the exported trace reconstruct
+the event engine's eviction count within the validation bars
+(``tests/test_obs.py``).
+
+CLI (the CI artifact generator)::
+
+    python -m repro.obs.trace --scale 0.1 --frac 0.4 --policy pbm \
+        --out trace_micro.perfetto.json --manifest run_manifest.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from . import counters, manifest as manifest_mod
+
+
+class TraceSession:
+    """Host-looped recorder over the compiled array-sim step pair."""
+
+    def __init__(self, spec, *, bandwidth_ref: float = 700e6,
+                 time_slice: float = 0.1, prefetch_pages: int = 8,
+                 policies: Optional[Sequence] = None,
+                 step_pages: float = 1.0, stepper: str = "horizon",
+                 h_max: float = 8.0, h_io: float = 3.0,
+                 max_events: int = 100_000):
+        from ..core.array_sim import sim as _sim
+
+        self._sim = _sim
+        self.spec = spec
+        self.stepper = stepper
+        self.pols = _sim.resolve_policies(policies)
+        self.dt = (float(step_pages) * float(np.max(spec.page_size))
+                   / float(bandwidth_ref))
+        self.n_inner = max(1, int(round(time_slice / self.dt)))
+        kw = dict(policies=self.pols, stepper=stepper, h_max=h_max,
+                  h_io=h_io)
+        self._cheap = _sim.make_step(spec, self.dt, time_slice,
+                                     prefetch_pages, refresh=False, **kw)
+        self._full = _sim.make_step(spec, self.dt, time_slice,
+                                    prefetch_pages, refresh=True, **kw)
+        self._jit_cheap = jax.jit(self._cheap)
+        self._jit_full = jax.jit(self._full)
+        self.max_events = max_events
+        self.events: List[dict] = []
+
+    # ------------------------------------------------------------- record --
+    def _record(self, kind: str, planned_h: int, prev, new) -> None:
+        if len(self.events) >= self.max_events:
+            return
+        prev_res = np.asarray(prev.resident)
+        new_res = np.asarray(new.resident)
+        pend = int(np.sum(np.asarray(new.req_step) != self._sim._REQ_NONE))
+        self.events.append({
+            "ts": float(prev.t),
+            "dur": float(new.t - prev.t),
+            "kind": kind,
+            "h": int(planned_h),
+            "loads": int(new.loads) - int(prev.loads),
+            "evicted": int(np.sum(prev_res & ~new_res)),
+            "pending": pend,
+            "resident_bytes": float(np.sum(
+                np.asarray(self.spec.page_size) * new_res)),
+        })
+
+    # ---------------------------------------------------------------- run --
+    def run(self, cfg, max_slices: int = 80_000):
+        """Drive the workload of ``cfg`` to completion, recording every
+        macro-step.  Returns the final :class:`SimState` — identical to
+        what the jitted runner produces for the same config."""
+        sim = self._sim
+        state = sim.init_state(self.spec, self.pols)
+        self.events = []
+
+        def running(st) -> bool:
+            return (bool(np.any(np.asarray(st.stream_done_t) < 0))
+                    and float(st.t) < float(cfg.max_time)
+                    and int(st.slices_done) < max_slices)
+
+        if self.stepper == "fixed":
+            carry = (state, self._cheap.query_view(state.qidx, state.pos))
+            while running(carry[0]):
+                for _ in range(self.n_inner - 1):
+                    prev = carry[0]
+                    carry = self._jit_cheap(carry, cfg)
+                    self._record("fine", 1, prev, carry[0])
+                prev = carry[0]
+                carry = self._jit_full(carry, cfg)
+                self._record("refresh", 1, prev, carry[0])
+            return carry[0]
+
+        view0 = self._cheap.query_view(state.qidx, state.pos)
+        win0 = self._cheap.window(view0)
+        carry = (state, view0, win0,
+                 self._cheap.adv_limit(win0, state.resident),
+                 np.float32(0.0), np.int32(self.n_inner), np.int32(1))
+        while running(carry[0]):
+            # mirror of the runner's inner while_loop (sim.make_runner):
+            # macro-jump while the slice has budget and the planned jump
+            # falls short of the boundary, then refresh absorbs the tail
+            while int(carry[5]) > 1 and int(carry[6]) < int(carry[5]):
+                h = min(int(carry[6]), int(carry[5]) - 1)
+                prev = carry[0]
+                carry = self._jit_cheap(carry, cfg)
+                self._record("jump" if h > 1 else "fine", h,
+                             prev, carry[0])
+            h = int(carry[5])
+            prev = carry[0]
+            carry = self._jit_full(carry, cfg)
+            self._record("refresh", h, prev, carry[0])
+        return carry[0]
+
+    # ------------------------------------------------------------ exports --
+    def eviction_total(self) -> int:
+        """Evictions reconstructed from the per-step residency diffs —
+        the number the event engine's ``total_evictions`` must match."""
+        return sum(e["evicted"] for e in self.events)
+
+    def to_chrome(self, pid: int = 0) -> dict:
+        """Chrome ``traceEvents`` JSON (Perfetto-loadable): macro-steps
+        as duration events (1 sim second = 1 trace ms), queue depth and
+        pool occupancy as counter tracks."""
+        scale = 1e3  # sim seconds -> trace microseconds / 1000
+        evs: List[dict] = [
+            {"ph": "M", "pid": pid, "tid": 0, "name": "process_name",
+             "args": {"name": f"array_sim [{self.stepper}]"}},
+            {"ph": "M", "pid": pid, "tid": 0, "name": "thread_name",
+             "args": {"name": "macro-steps"}},
+        ]
+        for e in self.events:
+            ts = e["ts"] * scale
+            evs.append({
+                "ph": "X", "pid": pid, "tid": 0, "name": e["kind"],
+                "ts": ts, "dur": max(e["dur"] * scale, 0.001),
+                "args": {"fine_steps": e["h"], "loads": e["loads"],
+                         "evicted": e["evicted"],
+                         "pending": e["pending"]},
+            })
+            evs.append({"ph": "C", "pid": pid, "name": "io_queue",
+                        "ts": ts, "args": {"pending": e["pending"]}})
+            evs.append({"ph": "C", "pid": pid, "name": "pool",
+                        "ts": ts,
+                        "args": {"resident_mb":
+                                 round(e["resident_bytes"] / 1e6, 3)}})
+        return {"traceEvents": evs, "displayTimeUnit": "ms"}
+
+
+def serving_events_to_chrome(events: Sequence[dict],
+                             label: str = "serving") -> dict:
+    """Chrome trace of ``ServingEngine`` structured events (one instant
+    event per admit/preempt/resume/prefetch; 1 engine step = 1 ms)."""
+    evs: List[dict] = [
+        {"ph": "M", "pid": 1, "tid": 0, "name": "process_name",
+         "args": {"name": f"ServingEngine [{label}]"}},
+    ]
+    for e in events:
+        args = {k: v for k, v in e.items() if k not in ("step", "kind")}
+        evs.append({
+            "ph": "i", "s": "g", "pid": 1, "tid": 0,
+            "name": e["kind"], "ts": e["step"] * 1e3, "args": args,
+        })
+    return {"traceEvents": evs, "displayTimeUnit": "ms"}
+
+
+# ------------------------------------------------------------------- CLI --
+
+def _build_point(scale: float, n_streams: int, queries: int, seed: int,
+                 frac: float):
+    from ..core.workload import (
+        make_lineitem_db, micro_accessed_bytes, micro_streams,
+    )
+    from ..core.array_sim import build_spec
+
+    db = make_lineitem_db(scale_tuples=max(1, int(6_001_215 * scale)))
+    streams = micro_streams(db, n_streams=n_streams,
+                            queries_per_stream=queries, seed=seed)
+    spec = build_spec(db, streams)
+    cap = max(1 << 22, int(frac * micro_accessed_bytes(db)))
+    return spec, cap
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Record one micro-workload lane as a Perfetto trace")
+    ap.add_argument("--scale", type=float, default=0.1,
+                    help="lineitem scale fraction (default 0.1)")
+    ap.add_argument("--frac", type=float, default=0.4,
+                    help="buffer fraction of the working set (default 0.4)")
+    ap.add_argument("--streams", type=int, default=4)
+    ap.add_argument("--queries", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--policy", default="pbm")
+    ap.add_argument("--stepper", default="horizon",
+                    choices=["fixed", "horizon"])
+    ap.add_argument("--out", default="trace_micro.perfetto.json")
+    ap.add_argument("--manifest", default=None,
+                    help="also write a RunManifest JSON here")
+    args = ap.parse_args(argv)
+
+    from ..core.array_sim import make_config
+
+    spec, cap = _build_point(args.scale, args.streams, args.queries,
+                             args.seed, args.frac)
+    sess = TraceSession(spec, policies=(args.policy,),
+                        stepper=args.stepper)
+    cfg = make_config(spec, cap, 700e6, args.policy)
+    state = sess.run(cfg)
+    with open(args.out, "w", encoding="utf-8") as f:
+        json.dump(sess.to_chrome(), f)
+    print(f"wrote {args.out}: {len(sess.events)} macro-steps, "
+          f"{sess.eviction_total()} evictions, "
+          f"sim_time={float(state.t):.2f}s")
+    if args.manifest:
+        man = manifest_mod.collect(
+            spec=spec, stepper=args.stepper, sanitize=False,
+            policy=args.policy, buffer_frac=args.frac, scale=args.scale,
+            macro_steps=len(sess.events),
+            evictions=sess.eviction_total(),
+        )
+        with open(args.manifest, "w", encoding="utf-8") as f:
+            json.dump(man, f, indent=2)
+        print(f"wrote {args.manifest}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -79,6 +79,7 @@ class ServingEngine:
         policy: Union[str, ServingPolicy] = "pbm",
         max_batch: int = 8,
         swap_delay: int = 1,
+        record_events: bool = False,
     ) -> None:
         if isinstance(policy, str):
             from repro.core import policy_registry
@@ -96,6 +97,21 @@ class ServingEngine:
         self.stats = EngineStats()
         self.token_gaps: List[int] = []   # steps between successive tokens
         self._decode_rate = 1.0  # tokens/step/request (measured)
+        # structured scheduler events (admit/preempt/resume/prefetch with
+        # the policy verdict attached) — the serving half of the obs tier;
+        # serving_bench.py --trace renders them as a Perfetto track
+        self.record_events = record_events
+        self.events: List[dict] = []
+
+    def _emit(self, kind: str, req: Optional[Request] = None, **args) -> None:
+        if not self.record_events:
+            return
+        ev = {"step": self.stats.steps, "kind": kind, "policy": self.policy}
+        if req is not None:
+            ev["rid"] = req.rid
+            ev["remaining"] = req.remaining
+        ev.update(args)
+        self.events.append(ev)
 
     # ---------------------------------------------------------------- admit
     def submit(self, req: Request) -> None:
@@ -117,6 +133,8 @@ class ServingEngine:
         )
         self.stats.resumes += 1
         self.stats.prefetched_resumes += bool(req.prefetched)
+        self._emit("resume", req, prefetched=req.prefetched,
+                   ready_step=req.ready_step)
         req.prefetched = False
         req.swapped = False
         req.admitted_step = self.stats.steps
@@ -170,6 +188,8 @@ class ServingEngine:
             req.admitted_step = self.stats.steps
             req.ready_step = self.stats.steps
             self.stats.prefills += 1
+            self._emit("admit", req, shared_prefix_pages=shared,
+                       prompt_pages=need)
             self.pending.popleft()
             self.active.append(req)
 
@@ -195,6 +215,7 @@ class ServingEngine:
             return
         req.kv.pages = [mapping.get(p, p) for p in req.kv.pages]
         req.prefetched = True
+        self._emit("prefetch", req, pages=need)
 
     # ------------------------------------------------------------- preempt
     def _victim(self) -> Optional[Request]:
@@ -222,6 +243,8 @@ class ServingEngine:
             victim.kv.pages = [mapping.get(p, p) for p in victim.kv.pages]
             self.swapped.append(victim)
             self.stats.preemptions += 1
+            self._emit("preempt", victim, freed_pages=len(mapping),
+                       for_swap_in=bool(for_swap_in))
             progressed = bool(mapping)
         return True
 
