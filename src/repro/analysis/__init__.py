@@ -15,6 +15,13 @@ drift past its error bars:
 * :mod:`repro.analysis.registry` — capability cross-check of every
   :class:`~repro.core.policy_registry.PolicyEntry` against the methods
   its factories' classes actually override;
+* :mod:`repro.analysis.kernels` / :mod:`repro.analysis.absint` — the
+  Pallas kernel contract verifier (DESIGN.md §9): AST rules over
+  ``src/repro/kernels`` (oracle pairing, BlockSpec memory_space, MXU
+  ``preferred_element_type``, the 2^24 float-mantissa key-cast rule)
+  plus abstract interpretation of every ``pl.pallas_call`` site's
+  grid/BlockSpec geometry (coverage, index bounds, write races, VMEM
+  budget) — the static gate before the accelerator push;
 * :mod:`repro.analysis.sanitize` — the runtime half: drives
   ``make_runner(sanitize=True)`` (checkify NaN/OOB + one-trace
   assertion) over the micro and TPC-H smoke points;
@@ -23,6 +30,7 @@ drift past its error bars:
 """
 
 from .findings import Finding
+from .kernels import verify_kernels
 from .lint import lint_paths, lint_source, repo_src_root
 from .registry import check_registry
 
@@ -33,13 +41,23 @@ __all__ = [
     "lint_source",
     "repo_src_root",
     "run_checks",
+    "verify_kernels",
 ]
 
 
-def run_checks(root=None, registry: bool = True):
-    """Run every static check; returns the combined finding list."""
+def run_checks(root=None, registry: bool = True, kernels: bool = True,
+               vmem_budget=None):
+    """Run every static check; returns the combined finding list.
+
+    ``kernels`` toggles the kernel contract verifier (both layers; the
+    abstract-interpretation layer imports jax and runs the kernel
+    wrappers under a recorder, so ``--no-kernels`` keeps a pure-AST
+    mode available).  ``vmem_budget`` overrides the per-step VMEM
+    byte budget the contract layer checks against."""
     findings = lint_paths(root)
     if registry:
         findings += check_registry()
+    if kernels:
+        findings += verify_kernels(root=root, vmem_budget=vmem_budget)
     findings.sort(key=lambda f: (f.path, f.line, f.rule))
     return findings

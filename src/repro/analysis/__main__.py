@@ -35,6 +35,13 @@ def main(argv=None) -> int:
     ap.add_argument("--no-registry", action="store_true",
                     help="skip the registry-coherence pass (pure AST mode; "
                          "no policy imports)")
+    ap.add_argument("--no-kernels", action="store_true",
+                    help="skip the Pallas kernel contract verifier (its "
+                         "abstract-interpretation layer imports jax and "
+                         "runs the kernel wrappers under a recorder)")
+    ap.add_argument("--vmem-budget", type=int, default=None, metavar="BYTES",
+                    help="per-step VMEM byte budget for the kernel "
+                         "contract layer (default: 16 MiB, one TPU core)")
     ap.add_argument("--sanitize-smoke", action="store_true",
                     help="run make_runner(sanitize=True) over the micro + "
                          "TPC-H smoke points (checkify NaN/OOB + one-trace "
@@ -47,7 +54,9 @@ def main(argv=None) -> int:
     rc = 0
     findings = []
     if args.check:
-        findings = run_checks(root=args.root, registry=not args.no_registry)
+        findings = run_checks(root=args.root, registry=not args.no_registry,
+                              kernels=not args.no_kernels,
+                              vmem_budget=args.vmem_budget)
         for f in findings:
             print(f.format())
         if findings:
@@ -56,7 +65,8 @@ def main(argv=None) -> int:
                   file=sys.stderr)
         else:
             print("repro.analysis: clean "
-                  "(jit-purity + deprecated-surface + registry-coherence)")
+                  "(jit-purity + deprecated-surface + registry-coherence "
+                  "+ kernel contracts)")
 
     if args.json_out is not None:
         out = Path(args.json_out)

@@ -1,0 +1,501 @@
+"""Abstract interpretation of ``pl.pallas_call`` sites — grid/BlockSpec
+checks over symbolic grid points, before any hardware time is spent.
+
+The ROADMAP's accelerator push grids the buffer-manager kernels over
+page blocks for P >> VMEM — exactly the regime where the bug classes
+live that Mosaic either rejects with an opaque error on real hardware or
+(worse) compiles into silent corruption: an index_map stepping past the
+operand, a BlockSpec×grid product that under- or over-covers it, two
+grid points racing on one output block, a per-step footprint past VMEM.
+None of these fail in interpret-mode CPU tests, because interpret mode
+follows the same index maps the checks validate — they fail on the TPU,
+a queue slot and a toolchain away.
+
+This module runs each kernel *wrapper* (the host-side function that
+builds grids and BlockSpecs and calls ``pl.pallas_call``) against small
+example operands with ``pl.pallas_call`` swapped for a recorder: the
+wrapper's own padding/reshape/transpose logic executes for real, the
+kernel body never runs, and the recorder captures the exact grid,
+BlockSpecs, scalar-prefetch operands and scratch the real call would
+get.  The checks then enumerate the grid (it is small for the example
+shapes — the properties checked are shape-relative, so they transfer to
+any P) and evaluate every ``index_map`` as a plain Python function:
+
+* ``kernel-index-oob``     — some grid point's block reaches outside the
+  operand (first/last point included; table-driven maps are evaluated
+  against the captured scalar-prefetch values, so a page-table entry at
+  the pool edge exercises the bound);
+* ``kernel-block-coverage`` — block_shape does not divide the operand
+  (Mosaic pads the tail block: reads see garbage lanes, reductions over
+  them are wrong), or the output index_map never writes some block;
+* ``kernel-write-race``    — two grid points map to the same output
+  block.  The online-softmax accumulator pattern (flash / paged
+  attention revisit the output across the innermost axis and commit once
+  under ``pl.when(last step)``) is the sanctioned exception: a revisit
+  is allowed iff every write to that output in the kernel body is
+  guarded by a ``pl.when`` condition on a revisited grid axis, or the
+  kernel def carries ``# analysis: revisit``;
+* ``kernel-vmem-budget``   — Σ (double-buffered block bytes) + declared
+  scratch exceeds the budget (default 16 MiB — one TPU core's VMEM);
+* ``kernel-memory-space``  — a (1, 1) scalar block riding VMEM or a
+  dense row riding SMEM (scalars must ride SMEM, dense rows VMEM).
+
+``capture_calls`` is the entry point tests and
+:mod:`repro.analysis.kernels` share; seeded-violation tests build toy
+wrappers and assert each rule fires.
+"""
+
+from __future__ import annotations
+
+import ast
+import contextlib
+import inspect
+import itertools
+import re
+import textwrap
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .findings import Finding
+
+__all__ = [
+    "CapturedCall",
+    "DEFAULT_VMEM_BUDGET",
+    "capture_calls",
+    "check_call",
+]
+
+#: one TPU core's VMEM; the checker budgets double-buffered blocks
+#: + declared scratch against it (compute temporaries are the kernel
+#: author's problem — this bounds what the BlockSpecs alone commit to)
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
+
+#: grids larger than this are probed at axis corners instead of densely
+_DENSE_GRID_LIMIT = 4096
+
+_PRAGMA_REVISIT = re.compile(r"#\s*analysis:\s*revisit\b")
+
+
+@dataclass
+class CapturedCall:
+    """One recorded ``pl.pallas_call`` invocation."""
+
+    name: str                              # kernel function __name__
+    kernel_fn: Callable                    # unwrapped (partial.func)
+    path: str                              # repo-relative source file
+    line: int                              # kernel def line
+    grid: Tuple[int, ...]
+    num_scalar_prefetch: int
+    in_specs: List[Any]                    # pl.BlockSpec per operand
+    out_specs: List[Any]
+    in_shapes: List[Tuple[Tuple[int, ...], Any]]    # (shape, dtype)
+    out_shapes: List[Tuple[Tuple[int, ...], Any]]
+    scratch_shapes: List[Any]
+    prefetch: List[np.ndarray] = field(default_factory=list)
+
+
+def _rel_path(path: Optional[str]) -> str:
+    if not path:
+        return "?"
+    marker = "src/"
+    return path[path.index(marker):] if marker in path else path
+
+
+def _unwrap(fn: Callable) -> Callable:
+    while hasattr(fn, "func"):      # functools.partial chains
+        fn = fn.func
+    return fn
+
+
+def _as_list(x) -> list:
+    if x is None:
+        return []
+    if isinstance(x, (list, tuple)):
+        return list(x)
+    return [x]
+
+
+def _aval(x) -> Tuple[Tuple[int, ...], Any]:
+    return tuple(int(d) for d in x.shape), x.dtype
+
+
+@contextlib.contextmanager
+def capture_calls(calls: List[CapturedCall]):
+    """Swap ``pl.pallas_call`` for a recorder appending to ``calls``.
+
+    The replacement returns zeros of ``out_shape`` so the wrapper's
+    post-call reshape/slice logic still runs; the kernel body never
+    executes.  Kernel modules resolve ``pl.pallas_call`` by attribute at
+    call time, so patching the module attribute reaches every wrapper.
+    """
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    real = pl.pallas_call
+
+    def fake(kernel, *, out_shape=None, grid=None, grid_spec=None,
+             in_specs=None, out_specs=None, scratch_shapes=(),
+             interpret=False, **_kw):
+        n_prefetch = 0
+        if grid_spec is not None:
+            grid = grid_spec.grid
+            in_specs = _as_list(grid_spec.in_specs)
+            out_specs = _as_list(grid_spec.out_specs)
+            scratch_shapes = _as_list(
+                getattr(grid_spec, "scratch_shapes", ()))
+            n_prefetch = int(getattr(grid_spec, "num_scalar_prefetch", 0))
+        grid_t = tuple(int(g) for g in _as_list(grid))
+        outs = _as_list(out_shape)
+        fn = _unwrap(kernel)
+        try:
+            path = inspect.getsourcefile(fn)
+            line = inspect.getsourcelines(fn)[1]
+        except (OSError, TypeError):
+            path, line = None, 0
+
+        def runner(*operands):
+            pre = [np.asarray(o) for o in operands[:n_prefetch]]
+            ins = operands[n_prefetch:]
+            calls.append(CapturedCall(
+                name=getattr(fn, "__name__", "<kernel>"),
+                kernel_fn=fn,
+                path=_rel_path(path),
+                line=line,
+                grid=grid_t,
+                num_scalar_prefetch=n_prefetch,
+                in_specs=_as_list(in_specs),
+                out_specs=_as_list(out_specs),
+                in_shapes=[_aval(o) for o in ins],
+                out_shapes=[(tuple(int(d) for d in o.shape), o.dtype)
+                            for o in outs],
+                scratch_shapes=_as_list(scratch_shapes),
+                prefetch=pre,
+            ))
+            zeros = tuple(jnp.zeros(o.shape, o.dtype) for o in outs)
+            return zeros[0] if not isinstance(out_shape, (list, tuple)) \
+                else zeros
+        return runner
+
+    pl.pallas_call = fake
+    try:
+        yield
+    finally:
+        pl.pallas_call = real
+
+
+# ------------------------------------------------------------ grid probing --
+
+def _grid_points(grid: Sequence[int]) -> List[Tuple[int, ...]]:
+    """All grid points when the product is small, else the axis corners
+    (every combination of {0, g-1}) — first and last point included."""
+    if not grid:
+        return [()]
+    total = 1
+    for g in grid:
+        total *= g
+    if total <= _DENSE_GRID_LIMIT:
+        return list(itertools.product(*[range(g) for g in grid]))
+    return list(itertools.product(*[
+        sorted({0, g - 1}) for g in grid
+    ]))
+
+
+def _block_index(spec, point: Tuple[int, ...],
+                 prefetch: Sequence[np.ndarray]) -> Optional[Tuple[int, ...]]:
+    """Evaluate one BlockSpec's index_map at a concrete grid point."""
+    index_map = getattr(spec, "index_map", None)
+    if index_map is None:
+        return None
+    out = index_map(*point, *prefetch)
+    if not isinstance(out, tuple):
+        out = (out,)
+    return tuple(int(i) for i in out)
+
+
+def _block_dims(spec) -> Optional[Tuple[int, ...]]:
+    bs = getattr(spec, "block_shape", None)
+    if bs is None:
+        return None
+    return tuple(1 if d is None else int(d) for d in bs)
+
+
+def _dtype_bytes(dtype) -> int:
+    return int(np.dtype(dtype).itemsize)
+
+
+def _numel(shape: Sequence[int]) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+# -------------------------------------------------- write-race sanctioning --
+
+def _kernel_ast(fn: Callable) -> Optional[ast.Module]:
+    try:
+        src = textwrap.dedent(inspect.getsource(fn))
+    except (OSError, TypeError):
+        return None
+    try:
+        return ast.parse(src)
+    except SyntaxError:
+        return None
+
+
+def _has_revisit_pragma(fn: Callable) -> bool:
+    try:
+        src = inspect.getsource(fn)
+    except (OSError, TypeError):
+        return False
+    head = src.splitlines()[:2]
+    return any(_PRAGMA_REVISIT.search(line) for line in head)
+
+
+def _dotted(func: ast.expr) -> str:
+    parts: List[str] = []
+    node = func
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _root_name(node: ast.expr) -> Optional[str]:
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+class _WriteGuardScan(ast.NodeVisitor):
+    """Finds writes to one ref parameter and the ``pl.when`` program-id
+    axes guarding each (lexically, through nested decorated defs)."""
+
+    def __init__(self, out_param: str):
+        self.out_param = out_param
+        self.pid_axes: Dict[str, int] = {}     # name -> program_id axis
+        self.guard_stack: List[Set[int]] = []
+        self.writes: List[Set[int]] = []       # guard axes per write
+
+    def _axes_in(self, node: ast.expr) -> Set[int]:
+        axes: Set[int] = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and sub.id in self.pid_axes:
+                axes.add(self.pid_axes[sub.id])
+            elif isinstance(sub, ast.Call) \
+                    and _dotted(sub.func).endswith("program_id") \
+                    and sub.args and isinstance(sub.args[0], ast.Constant):
+                axes.add(int(sub.args[0].value))
+        return axes
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        # program-id bindings: p = pl.program_id(2)
+        if (len(node.targets) == 1 and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, ast.Call)
+                and _dotted(node.value.func).endswith("program_id")
+                and node.value.args
+                and isinstance(node.value.args[0], ast.Constant)):
+            self.pid_axes[node.targets[0].id] = int(node.value.args[0].value)
+        for t in node.targets:
+            if isinstance(t, ast.Subscript) \
+                    and _root_name(t.value) == self.out_param:
+                active: Set[int] = set()
+                for g in self.guard_stack:
+                    active |= g
+                self.writes.append(active)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        # pl.store(o_ref, idx, val) counts as a write too
+        if _dotted(node.func).endswith("store") and node.args \
+                and _root_name(node.args[0]) == self.out_param:
+            active: Set[int] = set()
+            for g in self.guard_stack:
+                active |= g
+            self.writes.append(active)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        axes: Set[int] = set()
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call) and _dotted(dec.func).endswith("when"):
+                for arg in dec.args:
+                    axes |= self._axes_in(arg)
+        self.guard_stack.append(axes)
+        self.generic_visit(node)
+        self.guard_stack.pop()
+
+
+def _writes_guarded(call: CapturedCall, out_index: int,
+                    revisit_axes: Set[int]) -> bool:
+    """Every kernel-body write to output ``out_index`` sits under a
+    ``pl.when`` on a revisited axis (the sanctioned accumulator-commit
+    pattern)."""
+    tree = _kernel_ast(call.kernel_fn)
+    if tree is None or not tree.body \
+            or not isinstance(tree.body[0], ast.FunctionDef):
+        return False
+    fndef = tree.body[0]
+    params = [a.arg for a in fndef.args.posonlyargs + fndef.args.args]
+    pos = call.num_scalar_prefetch + len(call.in_specs) + out_index
+    if pos >= len(params):
+        return False
+    scan = _WriteGuardScan(params[pos])
+    # seed program-id bindings before walking nested defs in order
+    for stmt in fndef.body:
+        scan.visit(stmt)
+    if not scan.writes:
+        return False
+    return all(axes & revisit_axes for axes in scan.writes)
+
+
+# ------------------------------------------------------------- the checks --
+
+def check_call(call: CapturedCall, *,
+               vmem_budget: int = DEFAULT_VMEM_BUDGET) -> List[Finding]:
+    """Run every grid/BlockSpec check against one captured call."""
+    findings: List[Finding] = []
+
+    def emit(rule: str, message: str) -> None:
+        findings.append(Finding(rule=rule, path=call.path, line=call.line,
+                                message=f"{call.name}: {message}"))
+
+    points = _grid_points(call.grid)
+    operands = (
+        [("in", i, s, a) for i, (s, a) in
+         zip(range(len(call.in_specs)), call.in_shapes)]
+        + [("out", i, s, a) for i, (s, a) in
+           zip(range(len(call.out_specs)), call.out_shapes)]
+    )
+    specs = call.in_specs + call.out_specs
+
+    vmem_bytes = 0
+    for (kind, idx, shape, dtype), spec in zip(operands, specs):
+        label = f"{kind}[{idx}]"
+        block = _block_dims(spec)
+        space = str(getattr(spec, "memory_space", None) or "")
+
+        # ---- memory-space placement ---------------------------------------
+        eff = block if block is not None else shape
+        if _numel(eff) <= 2 and space == "vmem":
+            emit("kernel-memory-space",
+                 f"{label} is a scalar block {tuple(eff)} riding VMEM — "
+                 "scalars ride SMEM (a VMEM scalar burns a full "
+                 "(8, 128) tile and a DMA slot)")
+        elif _numel(eff) >= 128 and space == "smem":
+            emit("kernel-memory-space",
+                 f"{label} is a dense block {tuple(eff)} riding SMEM — "
+                 "dense rows ride VMEM (SMEM is for scalars and control)")
+
+        # ---- VMEM budget accounting ---------------------------------------
+        if space != "smem":
+            mult = 2 if call.grid else 1   # Mosaic double-buffers blocks
+            vmem_bytes += _numel(eff) * _dtype_bytes(dtype) * mult
+
+        if block is None:
+            continue
+
+        # ---- divisibility --------------------------------------------------
+        if len(block) != len(shape):
+            emit("kernel-block-coverage",
+                 f"{label} block rank {len(block)} != operand rank "
+                 f"{len(shape)} {shape}")
+            continue
+        for d, (b, s) in enumerate(zip(block, shape)):
+            if s % b != 0:
+                emit("kernel-block-coverage",
+                     f"{label} dim {d}: block {b} does not divide operand "
+                     f"{s} — Mosaic pads the tail block and reductions "
+                     "see garbage lanes (pad the operand to a block "
+                     "multiple in the wrapper)")
+
+        # ---- index bounds over the grid -----------------------------------
+        nblocks = tuple(max(1, -(-s // b)) for b, s in zip(block, shape))
+        seen: Dict[Tuple[int, ...], Tuple[int, ...]] = {}
+        oob_reported = False
+        for pt in points:
+            try:
+                bi = _block_index(spec, pt, call.prefetch)
+            except Exception as exc:  # noqa: BLE001 — a crash IS the finding
+                emit("kernel-index-oob",
+                     f"{label} index_map raised {type(exc).__name__} at "
+                     f"grid point {pt}: {exc}")
+                oob_reported = True
+                break
+            if bi is None:
+                break
+            if len(bi) != len(block):
+                emit("kernel-index-oob",
+                     f"{label} index_map returns rank {len(bi)} for a "
+                     f"rank-{len(block)} block")
+                oob_reported = True
+                break
+            if not oob_reported and any(
+                    i < 0 or i >= n for i, n in zip(bi, nblocks)):
+                emit("kernel-index-oob",
+                     f"{label} index_map reaches block {bi} at grid point "
+                     f"{pt}; valid blocks are {tuple(nblocks)} — the DMA "
+                     "would read/write outside the operand on hardware")
+                oob_reported = True
+            if pt in seen:
+                continue
+            seen[pt] = bi
+
+        # ---- output coverage + write races --------------------------------
+        if kind == "out" and not oob_reported and seen:
+            by_block: Dict[Tuple[int, ...], List[Tuple[int, ...]]] = {}
+            for pt, bi in seen.items():
+                by_block.setdefault(bi, []).append(pt)
+
+            dense = len(points) == max(
+                1, int(np.prod(call.grid)) if call.grid else 1)
+            if dense and all(s % b == 0 for b, s in zip(block, shape)):
+                missing = [bi for bi in itertools.product(
+                    *[range(n) for n in nblocks]) if bi not in by_block]
+                if missing:
+                    emit("kernel-block-coverage",
+                         f"{label} blocks {missing[:4]} (of "
+                         f"{int(np.prod(nblocks))}) are never written by "
+                         "any grid point — stale memory ships as output")
+
+            revisit_axes: Set[int] = set()
+            revisited = False
+            for bi, pts in by_block.items():
+                if len(pts) > 1:
+                    revisited = True
+                    for ax in range(len(call.grid)):
+                        vals = {p[ax] for p in pts}
+                        if len(vals) > 1:
+                            revisit_axes.add(ax)
+            if revisited:
+                sanctioned = (
+                    _has_revisit_pragma(call.kernel_fn)
+                    or _writes_guarded(call, idx, revisit_axes)
+                )
+                if not sanctioned:
+                    emit("kernel-write-race",
+                         f"{label} is written by multiple grid points "
+                         f"(revisit over grid axes {sorted(revisit_axes)}) "
+                         "without a pl.when commit guard on a revisited "
+                         "axis — on hardware the steps race; guard the "
+                         "final write with pl.when(last step) (the "
+                         "accumulator pattern) or mark the kernel "
+                         "`# analysis: revisit`")
+
+    # ---- scratch + budget -------------------------------------------------
+    for sc in call.scratch_shapes:
+        shape = getattr(sc, "shape", None)
+        dtype = getattr(sc, "dtype", None)
+        if shape is not None and dtype is not None:
+            vmem_bytes += _numel(shape) * _dtype_bytes(dtype)
+    if vmem_bytes > vmem_budget:
+        emit("kernel-vmem-budget",
+             f"per-step VMEM footprint {vmem_bytes} bytes (double-buffered "
+             f"blocks + scratch) exceeds the {vmem_budget}-byte budget — "
+             "shrink blocks or grid over more axes (the P >> VMEM tiling "
+             "plan, ROADMAP)")
+    return findings

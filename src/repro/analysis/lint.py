@@ -30,7 +30,11 @@ A ``# analysis: host`` comment on (or directly above) a ``def`` opts a
 host-side helper out (e.g. ``coop.chunk_geometry``, the compiler-time
 geometry builder); ``# analysis: traced`` opts extra functions in —
 used for ``sim._u01`` / ``sim.init_state``, which are module-level but
-called from inside the traced step.
+called from inside the traced step.  Pragma names are validated: an
+``# analysis:`` comment naming anything outside the vocabulary
+(``host`` / ``traced`` / ``obs`` / ``revisit`` / ``oracle=<name>``) is
+itself a finding (rule ``unknown-analysis-pragma``) — a typo'd opt-out
+must fail the gate, not silently opt nothing out.
 
 Host callbacks (rule ``jit-host-callback``)
 -------------------------------------------
@@ -71,6 +75,9 @@ Deprecated surfaces (checked everywhere in ``src/repro``)
 from __future__ import annotations
 
 import ast
+import io
+import re
+import tokenize
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -105,9 +112,17 @@ HOST_CALLBACK_NAMES = (
     "pure_callback", "io_callback",
 )
 
-_PRAGMA_HOST = "# analysis: host"
-_PRAGMA_TRACED = "# analysis: traced"
-_PRAGMA_OBS = "# analysis: obs"
+#: pragma grammar: the ``analysis:`` comment marker, a name, optional
+#: trailing prose.  The name is matched exactly (word chars and ``=``,
+#: so ``oracle=<name>`` is one token and surrounding backticks in prose
+#: terminate it) — a typo'd name is a finding, not a silent no-op.
+_PRAGMA_RE = re.compile(r"#\s*analysis:\s*([A-Za-z_][\w=]*)")
+#: the full pragma vocabulary across the analysis package: lint's
+#: region pragmas plus the kernel verifier's (``revisit`` sanctions an
+#: output-block revisit in absint, ``oracle=<name>`` declares a ref.py
+#: pairing in kernels)
+PRAGMA_NAMES = {"host", "traced", "obs", "revisit"}
+_PRAGMA_PREFIXES = ("oracle=",)
 
 
 def repo_src_root() -> Path:
@@ -135,17 +150,46 @@ def _file_kind(rel: str) -> str:
 
 
 def _pragma(src_lines: Sequence[str], node: ast.AST) -> Optional[str]:
-    """The ``# analysis:`` pragma on the def line or the line above."""
+    """The ``# analysis:`` pragma on the def line or the line above.
+
+    Returns the pragma name only when it is one of lint's region pragmas
+    (``host`` / ``traced`` / ``obs``) — a kernel-verifier pragma on the
+    same def (``revisit``, ``oracle=``) is someone else's and must not
+    leak a region classification here."""
     for ln in (node.lineno - 1, node.lineno - 2):
         if 0 <= ln < len(src_lines):
-            text = src_lines[ln]
-            if _PRAGMA_HOST in text:
-                return "host"
-            if _PRAGMA_TRACED in text:
-                return "traced"
-            if _PRAGMA_OBS in text:
-                return "obs"
+            m = _PRAGMA_RE.search(src_lines[ln])
+            if m and m.group(1) in ("host", "traced", "obs"):
+                return m.group(1)
     return None
+
+
+def _check_pragmas(source: str, rel: str, findings: List[Finding]) -> None:
+    """Rule ``unknown-analysis-pragma``: every ``# analysis:`` comment
+    must name a known pragma.  Scanned over COMMENT tokens (docstring
+    *mentions* of the spelling are strings and never match), so a typo'd
+    opt-out — ``# analysis: hosted`` — fails the gate instead of
+    silently opting nothing out."""
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return  # the ast pass already reported the syntax error
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        m = _PRAGMA_RE.search(tok.string)
+        if m is None:
+            continue
+        name = m.group(1)
+        if name in PRAGMA_NAMES or name.startswith(_PRAGMA_PREFIXES):
+            continue
+        findings.append(Finding(
+            rule="unknown-analysis-pragma", path=rel, line=tok.start[0],
+            col=tok.start[1],
+            message=f"unknown `# analysis: {name}` pragma — known names: "
+                    f"{sorted(PRAGMA_NAMES)} plus `oracle=<name>`; a typo "
+                    "here silently opts nothing out",
+        ))
 
 
 # ----------------------------------------------------------- taint engine --
@@ -610,6 +654,7 @@ def lint_source(source: str, rel: str) -> List[Finding]:
         ))
         return findings
     src_lines = source.splitlines()
+    _check_pragmas(source, rel, findings)
     _DeprecatedChecker(rel, findings).visit(tree)
 
     kind = _file_kind(rel)

@@ -65,7 +65,10 @@ def _kernel(
         k = k_ref[0].astype(jnp.float32)
         v = v_ref[0].astype(jnp.float32)
         dh = q.shape[-1]
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * (dh ** -0.5)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * (dh ** -0.5)
         qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
         kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         rel = qpos - kpos
@@ -82,7 +85,8 @@ def _kernel(
         p = jnp.where(mask, p, 0.0)
         l_ref[...] = (l_ref[...][:, 0] * alpha + p.sum(axis=-1))[:, None]
         acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ()))
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
         )
         m_ref[...] = m_new[:, None]
 
@@ -123,11 +127,15 @@ def flash_attention_kernel(
         ),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, block_kv, dh), lambda bh, qi, ki: (bh, ki, 0)),
-            pl.BlockSpec((1, block_kv, dh), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_q, dh), lambda bh, qi, ki: (bh, qi, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, block_kv, dh), lambda bh, qi, ki: (bh, ki, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, block_kv, dh), lambda bh, qi, ki: (bh, ki, 0),
+                         memory_space=pltpu.VMEM),
         ],
-        out_specs=pl.BlockSpec((1, block_q, dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda bh, qi, ki: (bh, qi, 0),
+                               memory_space=pltpu.VMEM),
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),

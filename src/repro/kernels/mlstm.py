@@ -52,17 +52,21 @@ def _kernel(
     mask = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
         jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
     L = jnp.where(mask, jnp.exp(li), 0.0)
-    qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (Q, Q)
+    qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
     w = qk * L * ig[None, :]
-    y_intra = jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())))
+    y_intra = jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
     nrm_intra = w.sum(axis=-1)                                # (Q,)
 
     dstart = jnp.exp(cum)
     y_inter = jax.lax.dot_general(
-        q, C_ref[...], (((1,), (0,)), ((), ()))
+        q, C_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
     ) * dstart[:, None]
     nrm_inter = jax.lax.dot_general(
-        q, n_ref[...], (((1,), (0,)), ((), ()))
+        q, n_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
     )[:, 0] * dstart
     nrm = jnp.maximum(jnp.abs(nrm_intra + nrm_inter), 1.0)
     y_ref[0, :, 0, :] = ((y_intra + y_inter) / nrm[:, None]).astype(y_ref.dtype)
@@ -70,11 +74,13 @@ def _kernel(
     dte = jnp.exp(total - cum) * ig                           # (Q,)
     kw = k * dte[:, None]                                     # (Q, K)
     C_ref[...] = C_ref[...] * jnp.exp(total) + jax.lax.dot_general(
-        kw, v, (((0,), (0,)), ((), ()))
+        kw, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
     )
     n_ref[...] = n_ref[...] * jnp.exp(total) + kw.sum(axis=0)[:, None]
 
 
+# analysis: oracle=gla_ref  (the mLSTM recurrence is the GLA family's)
 def mlstm_chunked_kernel(
     q: jax.Array,   # (B, T, H, K)
     k: jax.Array,
@@ -100,9 +106,11 @@ def mlstm_chunked_kernel(
 
     grid = (B, H, nc)
     qkv_spec = lambda last: pl.BlockSpec(
-        (1, chunk, 1, last), lambda bi, hi, ci: (bi, ci, hi, 0)
+        (1, chunk, 1, last), lambda bi, hi, ci: (bi, ci, hi, 0),
+        memory_space=pltpu.VMEM,
     )
-    gate_spec = pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi))
+    gate_spec = pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi),
+                             memory_space=pltpu.VMEM)
     out = pl.pallas_call(
         functools.partial(_kernel, chunk=chunk),
         grid=grid,

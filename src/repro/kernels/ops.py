@@ -27,11 +27,19 @@ from .paged_attention import paged_attention_kernel
 from .pbm_timeline import batched_evict_kernel, fifo_grant_kernel
 
 _BACKEND = "auto"
+#: the known backend names; set_backend validates eagerly so a typo
+#: fails at the call site with the valid list (the policy registry's
+#: unknown-name UX), not later at dispatch inside a traced step
+BACKENDS = ("auto", "pallas", "interpret", "reference")
 
 
 def set_backend(name: str) -> None:
     global _BACKEND
-    assert name in ("auto", "pallas", "interpret", "reference"), name
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown kernel backend {name!r}; valid backends: "
+            f"{sorted(BACKENDS)} (see repro.kernels.ops)"
+        )
     _BACKEND = name
 
 
@@ -115,6 +123,9 @@ def batched_evict(key, sizes, evictable, need_free, *, vmax: int = 64):
     The eviction policy is fully encoded in ``key`` — the
     ``ArrayPolicy.score_victims`` output for this step — so this one op
     serves LRU, PBM, CScan, OPT, and any future registered policy.
+    Integer score arrays (exact Belady next-use distances) are honoured
+    bit-exactly: both the kernel and the oracle keep them on an integer
+    path instead of an f32 cast that would collapse keys beyond 2^24.
     Called from inside the already-jitted ``array_sim`` step, so no jit
     wrapper here; backend policy picks the Mosaic kernel on TPU and the
     jnp oracle elsewhere (the oracle is itself fully vectorised).

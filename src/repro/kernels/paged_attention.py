@@ -65,7 +65,8 @@ def _kernel(
     v = v_ref[0].astype(jnp.float32)               # (S, dh)
     dh = q.shape[-1]
     scores = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ()))
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
     ) * (dh ** -0.5)                                # (G, S)
 
     pos = p * page_size + jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
@@ -79,7 +80,8 @@ def _kernel(
     probs = jnp.where(valid, probs, 0.0)
     l_ref[...] = (l_ref[...][:, 0] * alpha + probs.sum(axis=-1))[:, None]
     acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-        probs, v, (((1,), (0,)), ((), ()))
+        probs, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
     )
     m_ref[...] = m_new[:, None]
 
@@ -122,11 +124,14 @@ def paged_attention_kernel(
         num_scalar_prefetch=2,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, g, dh), q_map),
-            pl.BlockSpec((1, page_size, dh), kv_map),
-            pl.BlockSpec((1, page_size, dh), kv_map),
+            pl.BlockSpec((1, 1, g, dh), q_map, memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, page_size, dh), kv_map,
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, page_size, dh), kv_map,
+                         memory_space=pltpu.VMEM),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, dh), q_map),
+        out_specs=pl.BlockSpec((1, 1, g, dh), q_map,
+                               memory_space=pltpu.VMEM),
         scratch_shapes=[
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),

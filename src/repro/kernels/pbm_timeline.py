@@ -41,14 +41,15 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG = -1e30  # plain float: a jnp scalar would be a captured constant
+NEG_I32 = -(2**31) + 1  # i32 sentinel for the integer-key path
 
 
 def _kernel(fscal_ref, key_ref, sizes_ref, evictable_ref, evict_out_ref,
-            *, vmax: int):
+            *, vmax: int, int_key: bool = False):
     need_free = fscal_ref[0, 0]
 
     ev = evictable_ref[:]             # (1, P) f32 0/1
-    key = jnp.where(ev > 0, key_ref[:], NEG)
+    key = jnp.where(ev > 0, key_ref[:], NEG_I32 if int_key else NEG)
     P = key.shape[-1]
 
     # ---- batched priority pop via prefix bytes on the MXU ----------------
@@ -149,7 +150,7 @@ def fifo_grant_kernel(
 
 
 def batched_evict_kernel(
-    key: jax.Array,          # (P,) f32 policy score (higher = evict first)
+    key: jax.Array,          # (P,) f32 OR int policy score (higher = first)
     sizes: jax.Array,        # (P,) f32
     evictable: jax.Array,    # (P,) bool
     need_free: jax.Array,    # () f32
@@ -158,20 +159,30 @@ def batched_evict_kernel(
     interpret: bool = False,
 ) -> jax.Array:
     """Batched evict selection over a policy score array.  Returns the
-    ``(P,) bool`` evict mask."""
+    ``(P,) bool`` evict mask.
+
+    Integer score arrays (array-OPT's exact next-use distances) ride an
+    i32 path end to end: an unconditional f32 cast would round away key
+    bits beyond 2^24 (f32 carries a 24-bit mantissa), silently merging
+    distinct priorities exactly like the FIFO-tie trap documented on
+    ``fifo_grant_kernel`` — the kernel verifier's
+    ``kernel-float-mantissa-cast`` rule pins this dispatch."""
     P = key.shape[0]
+    int_key = bool(jnp.issubdtype(key.dtype, jnp.integer))
+    key_row = (key.reshape(1, P).astype(jnp.int32) if int_key
+               else key.reshape(1, P).astype(jnp.float32))
     fscal = jnp.asarray(need_free, jnp.float32).reshape(1, 1)
     smem = pl.BlockSpec(memory_space=pltpu.SMEM)
     vmem = pl.BlockSpec(memory_space=pltpu.VMEM)
     evict = pl.pallas_call(
-        functools.partial(_kernel, vmax=min(vmax, P)),
+        functools.partial(_kernel, vmax=min(vmax, P), int_key=int_key),
         out_shape=jax.ShapeDtypeStruct((1, P), jnp.float32),
         in_specs=[smem, vmem, vmem, vmem],
         out_specs=vmem,
         interpret=interpret,
     )(
         fscal,
-        key.reshape(1, P).astype(jnp.float32),
+        key_row,
         sizes.reshape(1, P).astype(jnp.float32),
         evictable.reshape(1, P).astype(jnp.float32),
     )

@@ -99,7 +99,7 @@ def mamba2_scan_ref(
 
 
 def batched_evict_ref(
-    key: jax.Array,         # (P,) f32 eviction priority (higher = evict first)
+    key: jax.Array,         # (P,) f32 OR int priority (higher = evict first)
     sizes: jax.Array,       # (P,) f32 page bytes
     evictable: jax.Array,   # (P,) bool resident & unpinned & valid
     need_free: jax.Array,   # () f32 bytes that must be freed
@@ -116,9 +116,17 @@ def batched_evict_ref(
     considering at most the ``vmax`` highest-priority candidates per call
     (a full argsort per step would dominate the simulation).  Key ties
     resolve by ascending page index.  Returns the evict mask.
+
+    Integer keys stay integer through the pop (an ``-inf`` sentinel
+    would promote them to float and round away bits beyond the mantissa
+    — the 2^24 trap the kernel verifier pins); the masked sentinel is
+    the dtype's own minimum instead.
     """
     P = key.shape[0]
-    key = jnp.where(evictable, key, -jnp.inf)
+    if jnp.issubdtype(key.dtype, jnp.integer):
+        key = jnp.where(evictable, key, jnp.iinfo(key.dtype).min)
+    else:
+        key = jnp.where(evictable, key, -jnp.inf)
     _, cand = jax.lax.top_k(key, min(vmax, P))  # ties -> ascending index
     c_ok = evictable[cand]
     sz_c = jnp.where(c_ok, sizes[cand], 0.0)
