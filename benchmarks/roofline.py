@@ -20,8 +20,9 @@ compute), the dominant term, and the roofline fraction
 i.e. model-flops utilisation assuming the step runs at the binding term —
 the number §Perf hillclimbs.
 
-``--kernels`` switches to the substrate's own two Pallas ops
-(``fifo_grant`` / ``batched_evict``): each is lowered at a representative
+``--kernels`` switches to the substrate's own Pallas ops
+(``fifo_grant`` / ``batched_evict`` / ``wake_solve``): each is lowered at
+a representative
 queue shape, costed with XLA's compiled ``cost_analysis()``, and executed
 once under a ``jax.profiler.TraceAnnotation`` span matching the
 ``jax.named_scope`` in ``kernels/ops.py`` — so a Perfetto capture of any
@@ -157,6 +158,9 @@ def kernel_rows(n_pages: int = 4096) -> List[Dict]:
          (key_i, sizes, jnp.float32(64 << 20), jnp.int32(16))),
         ("batched_evict", ops.batched_evict,
          (key_f, sizes, evictable, jnp.float32(32 << 20))),
+        ("wake_solve", ops.wake_solve,
+         (key_i, sizes, jnp.float32(4 << 20), jnp.float32(1 << 20),
+          jnp.int32(6))),
     ]
     rows = []
     for name, fn, fnargs in cases:

@@ -265,6 +265,123 @@ def sweep_array(which: str, policies=None, scale: float = 1.0, seed: int = 7,
     return out
 
 
+def scaling_curve(scale: float = SMOKE_SCALE, seed: int = 7,
+                  policy: str = "pbm", fracs=None):
+    """Wall-clock vs mesh shape for the batched buffer sweep — the
+    sharding scaling curve behind ``--scaling``.
+
+    Runs the same 4-lane (buffer-frac) batched sweep on the horizon
+    stepper under every usable mesh shape: plain vmap (1 device),
+    lane-sharded one-axis meshes over 2/4 host devices, and the two-axis
+    ``('lanes', 'page')`` meshes that page-shard the per-step candidate
+    scans.  Every timed wall is compile-separated (cold run first, then
+    the timed warm run) and trace-guarded: ``runner.trace_count()`` must
+    be exactly 1 afterwards or the row is marked re-traced and its wall
+    is not trustworthy.  Writes rows ``trend.py`` diffs run-over-run
+    (>20% warm-wall growth per mesh shape flags a regression).
+    """
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core.array_sim import (
+        compile_workload, make_config, make_runner, result_from_state,
+        stack_configs,
+    )
+
+    db = make_tpch_db(scale=scale)
+    streams = tpch_streams(db, n_streams=DEFAULTS["n_streams"], seed=seed)
+    ws = tpch_accessed_bytes(db, streams)
+    spec = compile_workload(db, streams)
+    fracs = list(fracs) if fracs is not None else [0.1, 0.2, 0.3, 0.45]
+    cfgs = stack_configs([
+        make_config(spec, max(1 << 22, int(f * ws)), DEFAULTS["bandwidth"],
+                    policy)
+        for f in fracs
+    ])
+    devs = jax.devices()
+    P = int(spec.page_size.shape[0])
+    n_lanes = len(fracs)
+
+    shapes = [(1, 1)]
+    for k in (2, 4, 8):
+        if k <= len(devs) and n_lanes % k == 0:
+            shapes.append((k, 1))
+    for lanes, pages in ((2, 2), (4, 2)):
+        if lanes * pages <= len(devs) and n_lanes % lanes == 0 \
+                and P % pages == 0:
+            shapes.append((lanes, pages))
+
+    rows = []
+    for lanes, pages in shapes:
+        n_dev = lanes * pages
+        if n_dev == 1:
+            mesh, label = None, "vmap"
+        elif pages == 1:
+            mesh = Mesh(np.array(devs[:n_dev]), ("lanes",))
+            label = f"({lanes},) lanes"
+        else:
+            mesh = Mesh(np.array(devs[:n_dev]).reshape(lanes, pages),
+                        ("lanes", "page"))
+            label = f"({lanes}, {pages}) lanes x page"
+        runner = make_runner(spec, bandwidth_ref=DEFAULTS["bandwidth"],
+                             time_slice=0.1 * scale, policies=(policy,),
+                             step_pages=2.0, stepper="horizon", mesh=mesh)
+        vrun = runner if mesh is not None else jax.jit(jax.vmap(runner))
+        t0 = time.time()
+        states = jax.block_until_ready(vrun(cfgs))
+        cold = time.time() - t0
+        t0 = time.time()
+        states = jax.block_until_ready(vrun(cfgs))
+        warm = time.time() - t0
+        traces = runner.trace_count()
+        results = [
+            result_from_state(jax.tree.map(lambda x, i=i: x[i], states),
+                              policy, dt_ref=runner.dt_ref)
+            for i in range(n_lanes)
+        ]
+        rows.append({
+            "mesh": label,
+            "devices": n_dev,
+            "lane_shards": lanes,
+            "page_shards": pages,
+            "wall_s": round(warm, 3),
+            "cold_wall_s": round(cold, 3),
+            "trace_count": traces,
+            "retraced": traces != 1,
+            "macro_steps": [r.extras.get("macro_steps", r.steps)
+                            for r in results],
+            "avg_stream_time_s": [round(r.avg_stream_time, 3)
+                                  for r in results],
+        })
+        print(f"  tpch scaling [{label:22s} {n_dev} device(s)]: "
+              f"warm {warm:6.2f}s cold {cold:6.2f}s traces={traces}",
+              flush=True)
+    base = rows[0]["wall_s"]
+    for r in rows:
+        r["speedup_vs_vmap"] = round(base / max(r["wall_s"], 1e-9), 3)
+    # stream times must not depend on the mesh shape — the sharded
+    # candidate construction is bitwise-identical by design, so any
+    # disagreement is a sharding bug, not noise
+    for r in rows[1:]:
+        if r["avg_stream_time_s"] != rows[0]["avg_stream_time_s"]:
+            print(f"  tpch scaling WARNING: {r['mesh']} results diverge "
+                  f"from vmap — page/lane sharding is not reduction-safe",
+                  flush=True)
+            r["diverged"] = True
+    from repro.obs import manifest as _m
+    return {
+        "workload": "tpch",
+        "policy": policy,
+        "scale": scale,
+        "fracs": fracs,
+        "stepper": "horizon",
+        "rows": rows,
+        "manifest": _m.collect(spec=spec, backend="scaling",
+                               workload="tpch"),
+    }
+
+
 def batched_tpch_race(scale: float = 1.0, seed: int = 7, fracs=None,
                       policy: str = "pbm"):
     """The batched TPC-H policy x buffer sweep vs the same points run
@@ -312,12 +429,21 @@ def batched_tpch_race(scale: float = 1.0, seed: int = 7, fracs=None,
                              time_slice=time_slice, policies=(policy,),
                              step_pages=2.0, stepper=stepper, mesh=mesh)
         vrun = runner if mesh is not None else jax.jit(jax.vmap(runner))
+        # compile-separated timing: the cold call pays the trace+compile,
+        # the warm call is the measured wall.  trace_count() guards the
+        # separation — a second trace on the warm call means the timed
+        # number silently includes compilation and the race is invalid.
         t0 = time.time()
         states = jax.block_until_ready(vrun(cfgs))
         cold = time.time() - t0
         t0 = time.time()
         states = jax.block_until_ready(vrun(cfgs))
         wall = time.time() - t0
+        traces = runner.trace_count()
+        if traces != 1:
+            print(f"  tpch batched sweep WARNING: {traces} jit traces "
+                  f"for the {stepper} runner — warm wall is "
+                  "compile-contaminated, race is invalid", flush=True)
         results = [
             result_from_state(jax.tree.map(lambda x, i=i: x[i], states),
                               policy, dt_ref=runner.dt_ref)
@@ -332,6 +458,7 @@ def batched_tpch_race(scale: float = 1.0, seed: int = 7, fracs=None,
         steppers[stepper] = {
             "wall_s": round(wall, 3),
             "cold_wall_s": round(cold, 3),
+            "trace_count": traces,
             "mesh_devices": 1 if mesh is None else mesh.size,
             "speedup_vs_event": round(event_wall / max(wall, 1e-9), 3),
             "avg_stream_time_s": [round(r.avg_stream_time, 3)
@@ -459,8 +586,23 @@ def main() -> None:
                     help="lane-sharded execution: spread batched lanes "
                          "across host devices via shard_map (auto), or "
                          "run the whole batch on one device (off)")
+    ap.add_argument("--scaling", action="store_true",
+                    help="run the sharding scaling curve (batched buffer "
+                         "sweep wall vs mesh shape, incl. page-axis "
+                         "meshes) and write "
+                         "experiments/results/scaling_curve.json")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.scaling:
+        setup_lane_devices()
+        scale = args.scale if args.scale is not None else SMOKE_SCALE
+        curve = scaling_curve(scale=scale)
+        out = args.out or "experiments/results/scaling_curve.json"
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(curve, f, indent=2)
+        print(f"  tpch scaling curve -> {out}")
+        return
     if args.backend == "array" and args.mesh == "auto":
         setup_lane_devices()
     smoke_scale = SMOKE_SCALE if args.backend == "array" \

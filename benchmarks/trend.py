@@ -31,6 +31,10 @@ RACE_FILES = ("batched_race.json", "tpch_race.json")
 #: CI serving smoke lane
 SERVING_FILE = "serving_bench.json"
 
+#: sharding scaling curve (wall vs mesh shape), written by
+#: ``benchmarks/tpch.py --scaling``
+SCALING_FILE = "scaling_curve.json"
+
 
 def _load_rows(path: str) -> List[dict]:
     try:
@@ -156,6 +160,64 @@ def _race_section(prev_dir: str, cur_dir: str, fname: str) -> List[str]:
     return lines
 
 
+def _scaling_section(prev_dir: str, cur_dir: str) -> List[str]:
+    """Wall-clock vs mesh shape from the sharding scaling curve
+    (``tpch.py --scaling``): one row per mesh shape with the warm
+    (compile-separated) wall and its delta vs the previous run.  A warm
+    wall more than 20% above the previous run's for the same mesh shape
+    flags a REGRESSION; re-traced rows (trace-guard tripped) and rows
+    whose results diverged from the vmap baseline are called out — both
+    invalidate the measurement, not just degrade it."""
+    def _load_dict(path):
+        try:
+            with open(path) as f:
+                d = json.load(f)
+            return d if isinstance(d, dict) else None
+        except (OSError, ValueError):
+            return None
+
+    cur = _load_dict(os.path.join(cur_dir, SCALING_FILE))
+    if cur is None or not isinstance(cur.get("rows"), list):
+        return []
+    prev = _load_dict(os.path.join(prev_dir, SCALING_FILE)) or {}
+    prev_rows = {r.get("mesh"): r for r in prev.get("rows", [])
+                 if isinstance(r, dict)}
+    lines = [f"### {SCALING_FILE}", "",
+             "| mesh | devices | wall (s) | Δ wall | speedup vs vmap | "
+             "notes |", "|---|---|---|---|---|---|"]
+    regressions = []
+    for r in cur["rows"]:
+        if not isinstance(r, dict):
+            continue
+        mesh = r.get("mesh")
+        w, p = r.get("wall_s"), prev_rows.get(mesh, {}).get("wall_s")
+        notes, flag = [], ""
+        if r.get("retraced"):
+            notes.append("⚠️ re-traced (wall includes compile)")
+        if r.get("diverged"):
+            notes.append("⚠️ results diverge from vmap")
+        if isinstance(w, (int, float)) and isinstance(p, (int, float)) \
+                and p > 0 and w > 1.2 * p:
+            flag = " ⚠️ REGRESSION"
+            regressions.append(str(mesh))
+        lines.append(
+            f"| {mesh} | {r.get('devices')} | {w} | "
+            f"{_fmt_delta(w, p)}{flag} | {r.get('speedup_vs_vmap')} | "
+            f"{'; '.join(notes)} |"
+        )
+    if regressions:
+        lines.append("")
+        lines.append(f"**⚠️ wall-clock regression >20% in {SCALING_FILE}: "
+                     f"{', '.join(regressions)}**")
+    cm = cur.get("manifest") or {}
+    if cm:
+        lines.append("")
+        lines.append(f"_current: sha `{cm.get('git_sha')}` "
+                     f"jax {cm.get('jax')}_")
+    lines.append("")
+    return lines
+
+
 def _serving_section(prev_dir: str, cur_dir: str) -> List[str]:
     """Serving-tier trend: p95 token latency, swap traffic, preemptions
     and prefetched resumes per (sweep, point, policy) from the
@@ -248,6 +310,10 @@ def report(prev_dir: str, cur_dir: str) -> str:
         if race:
             any_table = True
             lines.extend(race)
+    scaling = _scaling_section(prev_dir, cur_dir)
+    if scaling:
+        any_table = True
+        lines.extend(scaling)
     serving = _serving_section(prev_dir, cur_dir)
     if serving:
         any_table = True

@@ -339,6 +339,47 @@ def _c_fifo_grant():
             {})
 
 
+def _c_fifo_grant_tail():
+    """Blocked geometry with a ragged tail: P = 3 x _BLOCK + 129 pads to
+    a fourth block, so the recorder sees the (phase, i, j) grid walking
+    partially-padded edge tiles — the coverage/bounds rules must hold
+    with padding in play, not just at the divisible example point."""
+    import jax.numpy as jnp
+    from repro.kernels.pbm_timeline import fifo_grant_kernel
+
+    P = 3 * 512 + 129
+    return (fifo_grant_kernel,
+            (jnp.zeros(P, jnp.int32), jnp.ones(P, jnp.float32),
+             jnp.float32(64.0), jnp.int32(8)),
+            {})
+
+
+def _c_wake_solve():
+    import jax.numpy as jnp
+    from repro.kernels.pbm_timeline import wake_solve_kernel
+
+    P = 4096
+    return (wake_solve_kernel,
+            (jnp.zeros(P, jnp.int32), jnp.ones(P, jnp.float32),
+             jnp.float32(4.0), jnp.float32(2.0), jnp.int32(6)),
+            {"h_cap": 16})
+
+
+def _c_wake_solve_tail():
+    """Wake-solve at the ragged-tail geometry (P = 3 x _BLOCK + 129):
+    its global scratch rows are sized to the PADDED pool, so the
+    footprint and write-coverage checks must pass with the tail block
+    present."""
+    import jax.numpy as jnp
+    from repro.kernels.pbm_timeline import wake_solve_kernel
+
+    P = 3 * 512 + 129
+    return (wake_solve_kernel,
+            (jnp.zeros(P, jnp.int32), jnp.ones(P, jnp.float32),
+             jnp.float32(4.0), jnp.float32(2.0), jnp.int32(6)),
+            {"h_cap": 16})
+
+
 def _c_paged_attention():
     import numpy as np
     import jax.numpy as jnp
@@ -398,6 +439,9 @@ CONTRACTS = (
     KernelContract("batched_evict", _c_batched_evict),
     KernelContract("batched_evict[i32]", _c_batched_evict_i32),
     KernelContract("fifo_grant", _c_fifo_grant),
+    KernelContract("fifo_grant[tail]", _c_fifo_grant_tail),
+    KernelContract("wake_solve", _c_wake_solve),
+    KernelContract("wake_solve[tail]", _c_wake_solve_tail),
     KernelContract("paged_attention", _c_paged_attention),
     KernelContract("flash_attention", _c_flash_attention),
     KernelContract("mamba2_scan", _c_mamba2_scan),

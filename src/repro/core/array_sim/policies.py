@@ -178,7 +178,7 @@ class StepCtx:
                  page_valid, resident, last_used, load_mask, load_cand,
                  load_ok, cross_pidx, crossed, active, cols, cur, end,
                  start, eps, rate, speed_push, coop=None,
-                 slices_done=None,
+                 slices_done=None, slices_elapsed=None,
                  upd_pages=None, upd_on=None):
         self.spec = spec
         self.refresh = refresh
@@ -186,6 +186,11 @@ class StepCtx:
         self.now = now                  # f32 sim clock (end of this step)
         self.steps = steps
         self.slices_done = slices_done  # i32 PBM slices elapsed (pre-step)
+        self.slices_elapsed = slices_elapsed
+        # ^ i32 slices THIS refresh step stands in for (None == 1): the
+        #   wake-exact horizon refresh may absorb whole slices beyond
+        #   its own tail, and the timeline shift must advance by all of
+        #   them (shift_timeline's k)
         self.dt = dt                    # step length: static under the fixed
                                         # stepper, traced under "horizon"
         self.page_first = page_first
@@ -404,8 +409,10 @@ class ArrayPBM(ArrayPolicy):
             bucket_pre = jnp.where(
                 ~interested, NR, jnp.where(assign, b_target, bucket)
             ).astype(jnp.int32)
+            k = (jnp.int32(1) if ctx.slices_elapsed is None
+                 else ctx.slices_elapsed)
             return shift_timeline(bucket_pre, b_target, ctx.slices_done,
-                                  jnp.int32(1), nb=spec.nb, m=m)
+                                  k, nb=spec.nb, m=m)
         # within a slice: one fused gather/scatter over the update set.
         # Combining (min) scatter with an NR+1 sentinel for off entries:
         # duplicate ON entries of one page carry identical b_u (eta is a

@@ -99,6 +99,9 @@ _DIP_P = 0.31         # fraction of steps a stream's push speed dips to
 _DIP_DEPTH = 0.8     # dip floor as a fraction of the effective rate
 _SEG_PAGES = 2.0      # engine segment_pages: plan entries pinned per burst
 _SEG_WIN = 2          # static back-window (pages/column) the pin scan walks
+_MAX_ABSORB = 3       # whole slices a wake-exact refresh step may absorb
+                      # beyond its own tail (bounds the multi-slice PBM
+                      # timeline shift and the jump-length cap)
 
 
 class ArraySimConfig(NamedTuple):
@@ -310,6 +313,8 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
               policies: Sequence[ArrayPolicy] = ("lru", "pbm"),
               vmax: Optional[int] = None, stepper: str = "fixed",
               h_max: float = 8.0, h_io: float = 3.0,
+              wake_exact: bool = True,
+              page_axis: Optional[str] = None,
               telemetry: bool = False):
     """Build the pure ``step(carry, cfg) -> carry`` for a policy set.
 
@@ -344,6 +349,23 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
       fits inside ``h_max``.  ``h_io`` bounds
       the jump, in fine steps, while requests are pending — the
       wake-quantisation knob of the I/O-bound regime.
+
+    ``wake_exact`` (STATIC, horizon only) replaces the supersaturated
+    never-jump rule with the exact serial-server wake computation
+    (DESIGN.md §10): with the request queue frozen at the end of a step,
+    each queued page's grant step is solved in closed form
+    (``kernels.ops.wake_solve``) and a supersaturated lane jumps
+    straight to the first fine step that unblocks a stream — spanning
+    slice boundaries when the refresh step absorbs up to ``_MAX_ABSORB``
+    whole slices.  ``wake_exact=False`` restores the never-jump rule
+    bit-for-bit.  Non-saturated lanes behave identically either way.
+
+    ``page_axis`` (STATIC) is the mesh axis name of a page-sharded
+    ``shard_map`` enclosure: the batched evict/grant kernels then scan
+    only their own ``P / n`` pool slice for candidates and combine over
+    the gathered compact lists — bitwise-identical to the unsharded
+    path (see ``kernels.ops``).  The wake solve runs replicated (its
+    output feeds lane-global jump decisions).
 
     ``telemetry`` is the STATIC obs knob (``repro.obs``, DESIGN.md §8):
     with it on, the step threads a :class:`~repro.obs.counters.Telemetry`
@@ -392,11 +414,25 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         W = spec.trigger_window(max(float(dt), dt_long), tight=True)
         # budgeted FIFO pops per step: enough to drain an h_io-page jump
         # plus the banked credit (the fixed step's 6 cover ~2 pages + bank)
-        n_rounds = max(_LOAD_MAX, int(round(h_io)) + 2)
+        n_rounds_io = max(_LOAD_MAX, int(round(h_io)) + 2)
+        if wake_exact:
+            # wake-exact supersaturated jumps span at most the slice
+            # budget plus _MAX_ABSORB absorbed slices (and never more
+            # than 64 fine steps — the wake solve's h_cap); the grant's
+            # candidate window must cover every pop such a jump stands
+            # in for.  Growing vmax alone is results-neutral: strict
+            # head-of-line truncates at the pops SCALAR, which keeps the
+            # PR-9 cap (n_rounds_io) on non-saturated lanes.
+            wake_cap_i = min(64, max(h_max_i, (1 + _MAX_ABSORB) * n_inner))
+            n_rounds = max(n_rounds_io, wake_cap_i * _LOAD_MAX)
+        else:
+            wake_cap_i = h_max_i
+            n_rounds = n_rounds_io
     else:
         h_max_i = 1
         W = spec.trigger_window(float(dt))
-        n_rounds = _LOAD_MAX
+        n_rounds = n_rounds_io = _LOAD_MAX
+        wake_cap_i = 1
     dt_ref = jnp.float32(dt)
     h_io_f = jnp.float32(h_io)
     time_slice_f = jnp.float32(time_slice)
@@ -537,7 +573,7 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         return jnp.min(jnp.minimum(lim, cap), axis=1)       # (S,)
 
     def core(state: SimState, view: _View, win, cfg: ArraySimConfig, dt,
-             h_u, adv_lim_in=None, pend_in=None, tele=None):
+             h_u, adv_lim_in=None, pend_in=None, slices_u=None, tele=None):
         """One simulation step of length ``dt`` == ``h_u`` fine steps
         (``h_u`` is the static 1 under the fixed stepper, a traced i32
         under the horizon stepper — a macro-step stands in for ``h_u``
@@ -559,6 +595,10 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         t2 = state.t + jnp.where(ok_id, dt, cfg.max_time + 1.0)
         pol_local = lookup[jnp.clip(cfg.policy, 0, max_id)]
         is_coop = coop_flags[pol_local] if has_coop else False
+        # supersaturation of this lane (pool below the scans' aggregate
+        # plan-window bytes): selects the wake-exact jump model in the
+        # horizon tail and the matching pop cap at the macro grant
+        sat = cfg.capacity_bytes < sat_bytes
 
         # ============ CPU: consume up to the first absent trigger =========
         (active, length, rate, _cols, start, cur, end, eps, frontier,
@@ -642,7 +682,13 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         speed1 = jnp.where(finished, next_rate, state.speed)  # fresh scan
         if refresh:
             prog = consumed2 - state.consumed_ref
-            inst = prog / time_slice_f
+            # a wake-exact refresh step may stand in for several slices:
+            # the burst-report cadence is then slices_u slice lengths
+            if slices_u is None:
+                inst = prog / time_slice_f
+            else:
+                inst = prog / (time_slice_f
+                               * slices_u.astype(jnp.float32))
             speed2 = jnp.where(
                 active & (prog > _PROG_MIN) & ~finished,
                 _BURST_W * next_rate + (1.0 - _BURST_W) * inst,
@@ -909,9 +955,17 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             # validated operating points; credit a short window leaves
             # unspent banks for the next step, like the fixed path's
             # leftover credit).
-            pops = jnp.minimum(h_u * _LOAD_MAX, n_rounds)
+            if wake_exact:
+                # non-saturated lanes keep the PR-9 pop cap bit-for-bit;
+                # a wake-exact supersaturated jump needs every pop its
+                # fine steps would have taken
+                pop_cap = jnp.where(sat, n_rounds, n_rounds_io)
+            else:
+                pop_cap = n_rounds
+            pops = jnp.minimum(h_u * _LOAD_MAX, pop_cap)
             load_mask, load_bytes, n_load = kops.fifo_grant(
                 load_key, page_size, budget, pops, vmax=n_rounds,
+                page_axis=page_axis,
             )
             cand = cand_ok = None
         else:
@@ -970,8 +1024,21 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             state.consumed / jnp.maximum(state.t, 1e-9),
             1.0, None,
         )
+        dip_p = jnp.float32(_DIP_P)
+        if horizon:
+            # the dip is a per-FINE-step Bernoulli (calibrated against
+            # the engine's stall-exit EWMA crashes): a macro-step
+            # standing in for h_u fine steps fires it with the
+            # compounded probability, like the request gate above —
+            # h_u == 1 keeps _DIP_P exactly (fixed-stepper bit parity).
+            # Without this the wake-exact path under-samples dips and
+            # ran ~18% too fast at the 10% deep-thrash point.
+            dip_p = jnp.where(
+                h_u == 1, dip_p,
+                1.0 - (1.0 - dip_p) ** h_u.astype(jnp.float32),
+            )
         speed_push = jnp.where(
-            ud < _DIP_P, jnp.minimum(_DIP_DEPTH * eff_rate, speed2), speed2
+            ud < dip_p, jnp.minimum(_DIP_DEPTH * eff_rate, speed2), speed2
         )
 
         # ================= policy hooks + batched eviction ================
@@ -998,7 +1065,8 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             upd_pages = upd_on = None
         ctx = StepCtx(
             spec=spec, refresh=refresh, time_slice=time_slice_f, now=t2,
-            steps=state.steps, slices_done=state.slices_done, dt=dt,
+            steps=state.steps, slices_done=state.slices_done,
+            slices_elapsed=slices_u, dt=dt,
             page_first=page_first, page_last=page_last, page_col=page_col,
             page_valid=page_valid, resident=state.resident,
             last_used=last_used2, load_mask=load_mask, load_cand=cand,
@@ -1031,7 +1099,9 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             # pages no active scan is interested in leave the queue
             interested = (ctx.eta_estimate() < BIG_CUT) & page_valid
             req_step2 = jnp.where(interested, req_step2, _REQ_NONE)
-            slices_done2 = state.slices_done + 1
+            slices_done2 = state.slices_done + (
+                jnp.int32(1) if slices_u is None else slices_u
+            )
         else:
             slices_done2 = state.slices_done
 
@@ -1056,7 +1126,7 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
         else:
             need_free = need_io
         evict = kops.batched_evict(key, page_size, evictable, need_free,
-                                   vmax=vmax)
+                                   vmax=vmax, page_axis=page_axis)
 
         resident2 = (state.resident & ~evict) | load_mask
         last_used3 = jnp.where(load_mask, t2 + jit_p, last_used2)
@@ -1168,31 +1238,79 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             INF,
         )
         # io-credit horizon: while requests are pending the server is the
-        # clock — jump at most h_io page-transfer times at the lane's own
-        # bandwidth (the wake-quantisation knob; blocked scans wake at
-        # jump end instead of mid-jump).  SUPERSATURATED lanes do not
-        # jump at all: a pool smaller than the scans' aggregate plan
-        # window (streams x readahead entries) lives in the engine's
-        # churn-spiral regime, where the future is NOT predictable and
-        # wake quantisation feeds the spiral — exactly the regime the
-        # paper's premise excludes.  Those lanes keep the fine cadence
-        # (bit-equal to the fixed stepper) while roomier lanes jump.
-        pend_bytes2 = jnp.sum(jnp.where(
-            (req_step3 != _REQ_NONE) & ~resident2 & page_valid,
-            page_size, 0.0,
-        ))
+        # clock.  Non-saturated lanes jump at most h_io page-transfer
+        # times at the lane's own bandwidth (the wake-quantisation knob;
+        # blocked scans wake at jump end instead of mid-jump).
+        # SUPERSATURATED lanes — pool below the scans' aggregate plan
+        # window (streams x readahead entries), the engine's churn-spiral
+        # regime — used to keep the fine cadence entirely.  Under
+        # ``wake_exact`` they instead jump by the EXACT serial-server
+        # wake: with the queue frozen at this step's end the server's
+        # future is deterministic (each fine step banks bandwidth*dt_ref
+        # more credit and pops at most _LOAD_MAX fitting heads), so each
+        # queued page's grant step has a closed form (kernels.ops
+        # wake_solve, DESIGN.md §10) and the lane jumps straight to the
+        # first fine step that unblocks a stream — the dominant residual
+        # cost at deep thrash was exactly these h=1 crawl steps.
+        wanted3 = (req_step3 != _REQ_NONE) & ~resident2 & page_valid
+        pend_bytes2 = jnp.sum(jnp.where(wanted3, page_size, 0.0))
         pend2 = pend_bytes2 > 0.0
-        sat = cfg.capacity_bytes < sat_bytes
-        t_io_pend = jnp.where(sat, 0.0, h_io_f * dt_ref)
+        t_io_base = h_io_f * dt_ref
+        if wake_exact:
+            # the queue key the NEXT step will serve: same stamp-FIFO
+            # construction as load_key, one step older (stamps are
+            # carried, ties were fixed at stamp time — uniform aging
+            # keeps the service order; later arrivals rank behind every
+            # frozen entry, so the predicted prefix is exact)
+            stamp_age3 = jnp.clip(state.steps + 2 - req_step3, 0, 32767)
+            wake_key = jnp.where(wanted3, stamp_age3 * 32768 + tie15, -1)
+            wake_step = kops.wake_solve(
+                wake_key, page_size, io_credit2,
+                cfg.bandwidth * dt_ref, jnp.int32(_LOAD_MAX),
+                h_cap=wake_cap_i,
+            )
+            # a blocked stream wakes when EVERY absent page it sits on
+            # (trigger at/behind the cursor, all columns) is granted:
+            # per-stream max over those pages' grant steps, then the
+            # lane jumps to the EARLIEST such wake
+            w_pidx2, _wt2, w_need2, w_dist2 = win2
+            absent2 = w_need2[:, :, :W] & ~resident2[w_pidx2[:, :, :W]]
+            d0 = absent2 & (w_dist2[:, :, :W] <= 0.0)
+            kp = jnp.where(
+                d0, wake_step[w_pidx2[:, :, :W]].astype(jnp.float32), 0.0
+            )
+            k_stream = jnp.max(kp, axis=(1, 2))
+            blocked_s = active2 & ~runnable2 & jnp.any(d0, axis=(1, 2))
+            k_wake = jnp.min(jnp.where(blocked_s, k_stream, INF))
+            # headroom guard: the solve's credit cadence is only real
+            # while the pool (free + evictable bytes) can absorb it —
+            # past that the budget pins at headroom and the schedule is
+            # no longer a lower bound; fall back to the fine cadence.
+            # No blocked stream at all: the CPU candidates own the
+            # horizon, quantised like a non-saturated pending jump.
+            can_jump = jnp.isfinite(k_wake) & (
+                io_credit2 + k_wake * cfg.bandwidth * dt_ref <= headroom
+            )
+            t_wake = jnp.where(
+                can_jump, (k_wake + 0.25) * dt_ref,
+                jnp.where(jnp.isfinite(k_wake), dt_ref, t_io_base),
+            )
+            t_io_pend = jnp.where(sat, t_wake, t_io_base)
+        else:
+            t_io_pend = jnp.where(sat, 0.0, t_io_base)
         t_io = jnp.where(pend2, t_io_pend, INF)
         if has_coop:
             # cooperative lanes: the in-order trigger candidate is
             # meaningless (consumption is chunk-granular, out of order);
-            # the chunk in flight plays the pending queue's role
+            # the chunk in flight plays the pending queue's role.  The
+            # wake solve models the in-order stamp queue, not chunks —
+            # cooperative lanes keep the pre-wake-exact candidates.
             t_cpu = _sel(is_coop, jnp.full(S, INF), t_cpu)
+            t_io_coop = (jnp.where(sat, 0.0, t_io_base) if wake_exact
+                         else t_io_pend)
             t_io = _sel(
                 is_coop,
-                jnp.where(coop_io.inflight >= 0, t_io_pend, INF),
+                jnp.where(coop_io.inflight >= 0, t_io_coop, INF),
                 t_io,
             )
         # per-policy horizon providers (ArrayPolicy.scan_horizon): e.g.
@@ -1209,9 +1327,17 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             t_pol_min = INF
         next_dt = jnp.minimum(jnp.minimum(jnp.min(t_cpu), t_io), t_pol_min)
         # quantise to whole fine steps (floor: undershooting a horizon
-        # only costs an extra step; overshooting would cost fidelity)
+        # only costs an extra step; overshooting would cost fidelity).
+        # Wake-exact supersaturated lanes may plan past h_max up to the
+        # wake cap — the slice loop still clips each macro-step at the
+        # boundary, and the refresh step absorbs whole slices from the
+        # surplus (_MAX_ABSORB at most).
+        if wake_exact:
+            h_cap_lane = jnp.where(sat, wake_cap_i, h_max_i)
+        else:
+            h_cap_lane = h_max_i
         next_h = jnp.clip(
-            jnp.floor(next_dt / dt_ref).astype(jnp.int32), 1, h_max_i
+            jnp.floor(next_dt / dt_ref).astype(jnp.int32), 1, h_cap_lane
         )
         return new_state, view2, (win2, adv_lim2, pend_bytes2, next_h), tele2
 
@@ -1240,10 +1366,29 @@ def make_step(spec: SimSpec, dt: float, time_slice: float,
             else:
                 state, view, win, adv_lim, pend, rem_u, _next_h = carry
                 tele = None
+            if wake_exact:
+                # a wake-exact supersaturated jump may clear whole
+                # slices beyond this one's tail: absorb up to
+                # _MAX_ABSORB of them into this refresh step — the PBM
+                # timeline shift, the slice counter and the speed-EWMA
+                # cadence all advance by the absorbed count
+                # (shift_timeline takes the multi-slice k directly).
+                # Non-saturated lanes absorb exactly the tail, as before.
+                sat_l = cfg.capacity_bytes < sat_bytes
+                extra = jnp.where(
+                    sat_l,
+                    jnp.clip((_next_h - rem_u) // n_inner, 0, _MAX_ABSORB),
+                    0,
+                )
+                h_u = rem_u + extra * n_inner
+                slices_u = jnp.int32(1) + extra
+            else:
+                h_u = rem_u
+                slices_u = None
             new_state, view2, (win2, adv_lim2, pend2, next_h2), tele2 = core(
                 state, view, win, cfg,
-                rem_u.astype(jnp.float32) * dt_ref, rem_u, adv_lim, pend,
-                tele=tele,
+                h_u.astype(jnp.float32) * dt_ref, h_u, adv_lim, pend,
+                slices_u=slices_u, tele=tele,
             )
             out = (new_state, view2, win2, adv_lim2, pend2,
                    jnp.int32(n_inner), next_h2)
@@ -1295,6 +1440,7 @@ def make_runner(
     stepper: str = "fixed",
     h_max: float = 8.0,
     h_io: float = 3.0,
+    wake_exact: bool = True,
     mesh=None,
     sanitize: bool = False,
     telemetry: bool = False,
@@ -1321,9 +1467,11 @@ def make_runner(
       bounds the jump, in fine steps, while requests are pending (the
       wake-quantisation knob, calibrated against the validation bars);
       supersaturated lanes (pool below the scans' aggregate plan-window
-      bytes) never jump while pending — the churn-spiral regime needs
-      the fine cadence.  Finished lanes freeze at their final state
-      while slower lanes continue.
+      bytes) jump by the EXACT serial-server wake while pending
+      (``wake_exact``, the default — see :func:`make_step`), or never
+      jump at all with ``wake_exact=False`` (the pre-wake-exact rule,
+      bit-equal to the fixed stepper at those points).  Finished lanes
+      freeze at their final state while slower lanes continue.
 
     ``policies`` is the set of registry policies the runner's lanes may
     select (names or ``ArrayPolicy`` objects); the default is EVERY
@@ -1334,12 +1482,18 @@ def make_runner(
     spelling of that single-policy case was removed and now raises.
 
     vmap-ready: ``jax.vmap(make_runner(spec))`` over a stacked config runs
-    a whole sweep axis in one call.  With ``mesh`` (a one-axis
-    ``jax.sharding.Mesh`` over the devices to use), the returned runner
-    instead takes a STACKED config directly and executes it as a
-    ``shard_map`` over the lane axis — lanes spread across the mesh
-    devices, each shard running the vmapped runner with per-lane horizons
-    intact; the lane count must divide the mesh size evenly.
+    a whole sweep axis in one call.  With ``mesh`` (a ``jax.sharding.Mesh``
+    over the devices to use), the returned runner instead takes a STACKED
+    config directly and executes it as a ``shard_map`` — a one-axis mesh
+    shards the lane axis (lanes spread across the mesh devices, each
+    shard running the vmapped runner with per-lane horizons intact; the
+    lane count must divide the mesh size evenly), and a two-axis mesh
+    ``('lane', 'page')`` additionally shards the global page axis: each
+    page shard scans only its own ``P / n_page`` slice of the pool for
+    evict/grant candidates, with the reductions combined over gathered
+    compact candidate lists — bitwise-identical to the unsharded run
+    (``repro.kernels.ops``); the page-shard count must divide the padded
+    pool size ``spec.n_pages``.
 
     ``sanitize=True`` is the contract-checker mode (``repro.analysis``):
     the run compiles under ``jax.experimental.checkify`` NaN + OOB-index
@@ -1374,13 +1528,25 @@ def make_runner(
             "(checkify under shard_map); sanitize unsharded lanes instead"
         )
     pols = resolve_policies(policies)
+    page_axis = None
+    if mesh is not None:
+        if len(mesh.axis_names) not in (1, 2):
+            raise ValueError(
+                f"make_runner(mesh=...) wants a one-axis lane mesh or a "
+                f"two-axis ('lane', 'page') mesh, got axes "
+                f"{mesh.axis_names}"
+            )
+        if len(mesh.axis_names) == 2:
+            page_axis = mesh.axis_names[1]
     dt = float(step_pages) * float(np.max(spec.page_size)) / float(bandwidth_ref)
     cheap = make_step(spec, dt, time_slice, prefetch_pages, refresh=False,
                       policies=pols, vmax=vmax, stepper=stepper,
-                      h_max=h_max, h_io=h_io, telemetry=telemetry)
+                      h_max=h_max, h_io=h_io, wake_exact=wake_exact,
+                      page_axis=page_axis, telemetry=telemetry)
     full = make_step(spec, dt, time_slice, prefetch_pages, refresh=True,
                      policies=pols, vmax=vmax, stepper=stepper,
-                     h_max=h_max, h_io=h_io, telemetry=telemetry)
+                     h_max=h_max, h_io=h_io, wake_exact=wake_exact,
+                     page_axis=page_axis, telemetry=telemetry)
 
     if stepper == "fixed":
         n_inner = max(1, int(round(time_slice / dt)))
@@ -1460,11 +1626,9 @@ def make_runner(
     if mesh is not None:
         from jax.experimental.shard_map import shard_map
 
-        if len(mesh.axis_names) != 1:
-            raise ValueError(
-                f"make_runner(mesh=...) wants a one-axis lane mesh, got "
-                f"axes {mesh.axis_names}"
-            )
+        # configs shard over the lane axis only; per-page state is
+        # replicated across the page axis (each page shard scans its own
+        # pool slice inside the kernels — kops page_axis dispatch above)
         pspec = jax.sharding.PartitionSpec(mesh.axis_names[0])
         runner = jax.jit(shard_map(
             jax.vmap(counted_run), mesh=mesh,
@@ -1495,6 +1659,8 @@ def make_runner(
     runner.dt_ref = dt
     runner.stepper = stepper
     runner.lane_mesh = mesh
+    runner.page_axis = page_axis
+    runner.wake_exact = wake_exact
     runner.sanitize = sanitize
     runner.telemetry = telemetry
     runner.policy_names = tuple(p.name for p in pols)
@@ -1564,6 +1730,7 @@ def run_workload_array(
     spec: Optional[SimSpec] = None,
     runner=None,
     stepper: str = "fixed",
+    wake_exact: bool = True,
     sanitize: bool = False,
     telemetry: bool = False,
 ) -> ArrayResult:
@@ -1584,6 +1751,7 @@ def run_workload_array(
                              time_slice=time_slice,
                              prefetch_pages=prefetch_pages,
                              policies=(policy_name,), stepper=stepper,
+                             wake_exact=wake_exact,
                              sanitize=sanitize, telemetry=telemetry)
     cfg = make_config(spec, capacity_bytes, bandwidth, policy_name,
                       max_time=max_time)

@@ -24,7 +24,11 @@ from .flash_attention import flash_attention_kernel
 from .mamba2_scan import mamba2_scan_kernel
 from .mlstm import mlstm_chunked_kernel
 from .paged_attention import paged_attention_kernel
-from .pbm_timeline import batched_evict_kernel, fifo_grant_kernel
+from .pbm_timeline import (
+    batched_evict_kernel,
+    fifo_grant_kernel,
+    wake_solve_kernel,
+)
 
 _BACKEND = "auto"
 #: the known backend names; set_backend validates eagerly so a typo
@@ -94,7 +98,78 @@ def mamba2_scan(xh, a, b, c, chunk: int = 128):
     return y
 
 
-def fifo_grant(key, sizes, budget, pops, *, vmax: int = 16):
+# ---------------------------------------------------------------- sharding --
+#
+# Page-axis sharding (make_runner 2-axis mesh): per-page state is
+# replicated across the page axis, but each shard only *scans* its own
+# P/n slice of the pool for candidates — the O(P) candidate selection
+# divides across the mesh, and the vmax-bounded prefix solve runs on the
+# gathered compact candidate list.  The construction is reduction-safe
+# by being bitwise-identical to the unsharded oracle: a page in the
+# global top-vmax is necessarily in its own shard's local top-vmax, and
+# re-ordering the gathered candidates by ascending global index before a
+# stable top_k reproduces the exact (key desc, index asc) service order
+# — so the f32 prefix sums visit identical values in identical order.
+
+
+def _page_shard_candidates(key, aux, axis: str, vmax: int):
+    """Local top-``vmax`` per page shard, gathered and re-ordered into
+    the exact global service order.
+
+    Returns ``(kv, gidx, *aux_vals)`` flattened over shards and sorted
+    ascending by global index (so a stable ``top_k`` on ``kv`` resolves
+    ties exactly like the unsharded oracle's)."""
+    P = key.shape[0]
+    aux = list(aux)
+    n = int(jax.lax.psum(1, axis))
+    if P % n:
+        raise ValueError(
+            f"page axis {axis!r} has {n} shards which do not divide the "
+            f"padded pool size P={P}")
+    p_loc = P // n
+    start = jax.lax.axis_index(axis) * p_loc
+    k_loc = jax.lax.dynamic_slice(key, (start,), (p_loc,))
+    _, cand = jax.lax.top_k(k_loc, min(vmax, p_loc))
+    rows = [k_loc[cand], cand + start]
+    rows += [jax.lax.dynamic_slice(a, (start,), (p_loc,))[cand] for a in aux]
+    gathered = [jax.lax.all_gather(r, axis).reshape(-1) for r in rows]
+    order = jnp.argsort(gathered[1])
+    return [g[order] for g in gathered]
+
+
+def _grant_page_sharded(key, sizes, budget, pops, vmax: int, axis: str):
+    kv, gidx, sz = _page_shard_candidates(key, [sizes], axis, vmax)
+    take = min(vmax, kv.shape[0])
+    kv_top, pos = jax.lax.top_k(kv, take)
+    sz_c = sz[pos]
+    csum = jnp.cumsum(sz_c)
+    ok = jnp.cumprod(
+        ((kv_top >= 0) & (csum <= budget)
+         & (jnp.arange(take) < pops)).astype(jnp.int32)
+    ).astype(bool)
+    mask = jnp.zeros((key.shape[0],), bool).at[gidx[pos]].set(ok)
+    return mask, jnp.sum(jnp.where(ok, sz_c, 0.0)), jnp.sum(ok)
+
+
+def _evict_page_sharded(key, sizes, evictable, need_free, vmax: int,
+                        axis: str):
+    if jnp.issubdtype(key.dtype, jnp.integer):
+        keym = jnp.where(evictable, key, jnp.iinfo(key.dtype).min)
+    else:
+        keym = jnp.where(evictable, key, -jnp.inf)
+    kv, gidx, sz, ev = _page_shard_candidates(
+        keym, [sizes, evictable], axis, vmax)
+    take = min(vmax, kv.shape[0])
+    _, pos = jax.lax.top_k(kv, take)
+    c_ok = ev[pos]
+    sz_c = jnp.where(c_ok, sz[pos], 0.0)
+    csum = jnp.cumsum(sz_c)
+    take_mask = c_ok & (csum - sz_c < need_free) & (need_free > 0)
+    return jnp.zeros((key.shape[0],), bool).at[gidx[pos]].set(take_mask)
+
+
+def fifo_grant(key, sizes, budget, pops, *, vmax: int = 16,
+               page_axis: Optional[str] = None):
     """Budgeted FIFO grant over the request-queue key array (the array
     sim's serial I/O server pop, macro-step sized).
 
@@ -105,10 +180,18 @@ def fifo_grant(key, sizes, budget, pops, *, vmax: int = 16):
     backend policy picks the Mosaic kernel on TPU and the jnp oracle
     (one ``top_k`` + prefix product) elsewhere.
 
+    With ``page_axis`` (inside a page-sharded ``shard_map`` body) each
+    shard scans only its own P/n pool slice for candidates and the
+    prefix solve runs on the gathered compact list — bitwise-identical
+    to the unsharded path (see the sharding note above).
+
     The ``jax.named_scope`` span names this op in profiler traces and in
     lowered HLO, so ``benchmarks/roofline.py --kernels`` and a Perfetto
     capture both attribute its cost to ``kernel:fifo_grant``."""
     with jax.named_scope("kernel:fifo_grant"):
+        if page_axis is not None:
+            return _grant_page_sharded(key, sizes, budget, pops, vmax,
+                                       page_axis)
         mode = _use_pallas()
         if mode is not False:
             return fifo_grant_kernel(
@@ -117,7 +200,8 @@ def fifo_grant(key, sizes, budget, pops, *, vmax: int = 16):
         return ref.fifo_grant_ref(key, sizes, budget, pops, vmax=vmax)
 
 
-def batched_evict(key, sizes, evictable, need_free, *, vmax: int = 64):
+def batched_evict(key, sizes, evictable, need_free, *, vmax: int = 64,
+                  page_axis: Optional[str] = None):
     """Batched evict selection over a policy score array (array-sim core).
 
     The eviction policy is fully encoded in ``key`` — the
@@ -130,10 +214,18 @@ def batched_evict(key, sizes, evictable, need_free, *, vmax: int = 64):
     wrapper here; backend policy picks the Mosaic kernel on TPU and the
     jnp oracle elsewhere (the oracle is itself fully vectorised).
 
+    With ``page_axis`` (inside a page-sharded ``shard_map`` body) each
+    shard scans only its own P/n pool slice for victim candidates —
+    bitwise-identical to the unsharded path (see the sharding note
+    above).
+
     Wrapped in a ``jax.named_scope`` span so profiler traces and
     ``roofline.py --kernels`` attribute it as ``kernel:batched_evict``.
     """
     with jax.named_scope("kernel:batched_evict"):
+        if page_axis is not None:
+            return _evict_page_sharded(key, sizes, evictable, need_free,
+                                       vmax, page_axis)
         mode = _use_pallas()
         if mode is not False:
             return batched_evict_kernel(
@@ -142,6 +234,34 @@ def batched_evict(key, sizes, evictable, need_free, *, vmax: int = 64):
             )
         return ref.batched_evict_ref(
             key, sizes, evictable, need_free, vmax=vmax,
+        )
+
+
+def wake_solve(key, sizes, credit0, inc, pops, *, h_cap: int = 64):
+    """Per-page grant step of the frozen serial I/O server — the
+    event-horizon stepper's wake-exact queue model (how many fine steps
+    until each queued page is granted, given the io-credit cadence
+    ``credit0 + k*inc`` and the per-step ``pops`` cap).
+
+    Pages not wanted (``key < 0``) or not granted within ``h_cap`` fine
+    steps carry the sentinel ``h_cap + 1``.  Called from inside the
+    already-jitted event-horizon step, so no jit wrapper; backend policy
+    picks the page-blocked Mosaic kernel on TPU and the jnp oracle (one
+    stable argsort + the pop-rate recursion) elsewhere.  Under page
+    sharding the inputs are replicated and the solve's outputs feed
+    lane-global jump decisions, so it runs replicated as-is.
+
+    Wrapped in a ``jax.named_scope`` span so profiler traces and
+    ``roofline.py --kernels`` attribute it as ``kernel:wake_solve``."""
+    with jax.named_scope("kernel:wake_solve"):
+        mode = _use_pallas()
+        if mode is not False:
+            return wake_solve_kernel(
+                key, sizes, credit0, inc, pops,
+                h_cap=h_cap, interpret=(mode is None),
+            )
+        return ref.wake_solve_ref(
+            key, sizes, credit0, inc, pops, h_cap=h_cap,
         )
 
 

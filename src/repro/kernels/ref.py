@@ -169,6 +169,61 @@ def fifo_grant_ref(
     return mask, jnp.sum(jnp.where(ok, sz, 0.0)), jnp.sum(ok)
 
 
+def wake_solve_ref(
+    key: jax.Array,      # (P,) i32 queue priority (-1 = not wanted)
+    sizes: jax.Array,    # (P,) f32 page bytes
+    credit0: jax.Array,  # () f32 io-credit already banked
+    inc: jax.Array,      # () f32 credit bytes gained per fine step
+    pops: jax.Array,     # () i32 max queue pops per fine step
+    *,
+    h_cap: int = 64,
+) -> jax.Array:
+    """Oracle for the wake-solve kernel (serial-server grant schedule).
+
+    With the request queue frozen at the end of a macro step, the serial
+    I/O server's future is deterministic: each fine step banks ``inc``
+    more credit bytes and pops at most ``pops`` queue heads whose
+    cumulative bytes fit the banked credit.  The grant count after ``k``
+    fine steps follows the recursion
+
+        n_k = min(bytes_ok(credit0 + k*inc), n_{k-1} + pops),   n_0 = 0
+
+    where ``bytes_ok(c)`` counts queue entries whose prefix-inclusive
+    byte sum — in service order: descending ``key``, ties by ascending
+    page index — fits ``c``.  (The naive closed form
+    ``max(k_bytes, ceil(rank/pops))`` is WRONG: byte-starved early steps
+    waste pop capacity instead of banking it; the recursion is exact.)
+    A page at service rank ``r`` is granted at the first ``k`` with
+    ``n_k >= r + 1``.
+
+    Returns the per-page grant step (i32 in ``1..h_cap``); pages not
+    wanted (``key < 0``) or not granted within ``h_cap`` steps carry the
+    sentinel ``h_cap + 1``.  ``n_k`` is non-decreasing (``bytes_ok`` is
+    monotone in credit), so "first k" is a searchsorted count.
+    """
+    P = key.shape[0]
+    order = jnp.argsort(-key)  # stable: descending key, ties ascending idx
+    kv = key[order]
+    w_ord = kv >= 0
+    sz = jnp.where(w_ord, sizes[order], 0.0)
+    csum = jnp.cumsum(sz)
+    ks = jnp.arange(1, h_cap + 1, dtype=jnp.float32)
+    # grants the banked credit alone allows after k steps (byte feasibility)
+    cnt = jnp.sum(
+        w_ord[None, :] & (csum[None, :] <= credit0 + ks[:, None] * inc),
+        axis=1,
+    ).astype(jnp.float32)
+    popf = jnp.maximum(pops, 0).astype(jnp.float32)
+    # unrolled recursion: n_k = min(min_{1<=j<=k}(cnt_j + (k-j)*pops), k*pops)
+    gap = ks[:, None] - ks[None, :]            # (k, j) -> k - j
+    ramp = jnp.where(gap >= 0, cnt[None, :] + gap * popf, jnp.inf)
+    n_k = jnp.minimum(jnp.min(ramp, axis=1), ks * popf)
+    rank = jnp.arange(P, dtype=jnp.float32)
+    step = 1 + jnp.sum(n_k[None, :] < (rank[:, None] + 1.0), axis=1)
+    step = jnp.where(w_ord, step, h_cap + 1).astype(jnp.int32)
+    return jnp.zeros((P,), jnp.int32).at[order].set(step)
+
+
 def gla_ref(
     q: jax.Array,    # (B, T, H, K)
     k: jax.Array,
